@@ -1,0 +1,40 @@
+"""Wall-time of each softmax implementation (jitted, CPU) + the Pallas
+kernels in interpret mode, on attention-shaped batches.
+
+Absolute numbers are CPU-emulation times (the TPU targets are the roofline
+figures); the *relative* ordering of the emulations tracks operation count.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import available, get_softmax
+
+SHAPES = [(1024, 128), (256, 1024)]
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    for rows, cols in SHAPES:
+        z = jax.random.normal(key, (rows, cols), jnp.float32) * 3
+        base = None
+        for impl in ["exact", "hyft32", "hyft16", "base2", "koca", "lut8",
+                     "softermax"]:
+            fn = jax.jit(get_softmax(impl))
+            us = _time(fn, z)
+            base = base or us
+            report(f"bench_softmax,{impl},shape={rows}x{cols},"
+                   f"us_per_call={us:.1f},vs_exact={us / base:.2f}")

@@ -1,0 +1,39 @@
+"""Render the roofline table from cached dry-run JSONs (results/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh="single", tag="baseline"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"{mesh}__*__{tag}.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def run(report, mesh="single", tag="baseline"):
+    cells = load_cells(mesh, tag)
+    if not cells:
+        report(f"roofline,{mesh},{tag},NO_CELLS (run repro.launch.dryrun first)")
+        return
+    for r in cells:
+        if r["status"] == "skipped":
+            report(f"roofline,{mesh},{r['arch']},{r['shape']},SKIP")
+            continue
+        if r["status"] != "ok":
+            report(f"roofline,{mesh},{r['arch']},{r['shape']},ERROR")
+            continue
+        roof = r["roofline"]
+        report(
+            f"roofline,{mesh},{r['arch']},{r['shape']},"
+            f"compute_s={roof['compute_s']:.4e},"
+            f"memory_s={roof['memory_s']:.4e},"
+            f"collective_s={roof['collective_s']:.4e},"
+            f"dominant={roof['dominant']},"
+            f"frac={roof['roofline_fraction']:.3f},"
+            f"useful={r.get('useful_flops_ratio', 0):.3f},"
+            f"peak_gib={r['memory']['peak_device_bytes'] / 2 ** 30:.2f}")

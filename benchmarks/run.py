@@ -1,0 +1,29 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_softmax, roofline_report, table1_accuracy,
+                            table2_training, table3_hardware)
+
+    def report(line: str) -> None:
+        print(line, flush=True)
+
+    t0 = time.time()
+    report("# Hyft benchmark harness — one section per paper table")
+    report("## Table 3: hardware cost model (fabric-free op counts)")
+    table3_hardware.run(report)
+    report("## Softmax emulation wall-time (CPU, jitted)")
+    bench_softmax.run(report)
+    report("## Table 1: drop-in inference accuracy (synthetic-GLUE proxy)")
+    table1_accuracy.run(report)
+    report("## Table 2: training-through-Hyft accuracy (proxy)")
+    table2_training.run(report)
+    report("## Roofline (from cached dry-run artifacts)")
+    roofline_report.run(report)
+    report(f"# done in {time.time() - t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

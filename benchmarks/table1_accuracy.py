@@ -1,0 +1,102 @@
+"""Paper Table 1 (inference accuracy) proxy.
+
+The paper drops Hyft into a fine-tuned BERT and reports GLUE/SQuAD accuracy
+unchanged vs the original softmax, while [13]/[29] degrade.  Offline proxy
+(no GLUE/torch in the container): train a small BERT-style classifier on the
+synthetic marker-classification task with EXACT softmax, then swap the
+softmax at inference time and measure accuracy deltas — the same drop-in
+protocol as the paper.
+
+Also reports distribution-level softmax error metrics (mean/max abs, KL) on
+attention-logit-shaped inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import get_config, smoke_config
+from repro.data.synthetic import classify_batch
+from repro.models import transformer
+from repro.models.layers import param, unbox
+from repro.core.registry import get_softmax
+
+F32 = jnp.float32
+IMPLS = ["exact", "hyft32", "hyft16", "koca", "base2", "lut8"]
+
+
+def _bert_proxy_cfg(softmax="exact"):
+    return smoke_config(get_config("bert-base")).with_(
+        softmax_impl=softmax, vocab=64, n_layers=2, compute_dtype="float32")
+
+
+def _classifier_init(key, cfg, n_classes=4):
+    p = {"backbone": transformer.init(key, cfg),
+         "head": {"w": param(jax.random.fold_in(key, 1),
+                             (cfg.d_model, n_classes), (None, None), F32)}}
+    return unbox(p)
+
+
+def _logits(params, tokens, cfg):
+    hid, _ = transformer.forward(params["backbone"], tokens, cfg,
+                                 remat="none", causal=False)
+    pooled = jnp.mean(hid.astype(F32), axis=1)
+    return pooled @ params["head"]["w"]
+
+
+def _train_classifier(steps=150, seed=0):
+    cfg = _bert_proxy_cfg("exact")
+    params = _classifier_init(jax.random.PRNGKey(seed), cfg)
+    ocfg = optim.OptConfig(name="adamw", lr=2e-3, weight_decay=0.0)
+    ost = optim.init(ocfg, params)
+
+    @jax.jit
+    def step(params, ost, tokens, labels):
+        def loss_fn(p):
+            lg = _logits(p, tokens, cfg)
+            return jnp.mean(
+                -jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]), labels])
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, ost = optim.update(ocfg, g, ost, params)
+        return params, ost, loss
+
+    for s in range(steps):
+        b = classify_batch(seed, s, 64, 24, vocab=cfg.vocab)
+        params, ost, loss = step(params, ost, b["tokens"], b["labels"])
+    return cfg, params
+
+
+def _accuracy(params, cfg, softmax, n_batches=8, seed=99):
+    cfg2 = cfg.with_(softmax_impl=softmax)
+    correct = total = 0
+    for s in range(n_batches):
+        b = classify_batch(seed, 1000 + s, 64, 24, vocab=cfg.vocab)
+        lg = _logits(params, b["tokens"], cfg2)
+        correct += int(jnp.sum(jnp.argmax(lg, -1) == b["labels"]))
+        total += lg.shape[0]
+    return correct / total
+
+
+def softmax_error_metrics(impl, key=jax.random.PRNGKey(0)):
+    """Distribution-level errors on attention-shaped logits."""
+    z = jax.random.normal(key, (256, 128), F32) * 3.0
+    s = get_softmax(impl)(z).astype(F32)
+    ref = jax.nn.softmax(z, -1)
+    p = s / jnp.maximum(jnp.sum(s, -1, keepdims=True), 1e-9)
+    kl = jnp.sum(ref * (jnp.log(ref + 1e-12) - jnp.log(p + 1e-12)), -1)
+    return dict(mean_abs=float(jnp.mean(jnp.abs(s - ref))),
+                max_abs=float(jnp.max(jnp.abs(s - ref))),
+                mean_kl=float(jnp.mean(kl)))
+
+
+def run(report):
+    cfg, params = _train_classifier()
+    base = _accuracy(params, cfg, "exact")
+    for impl in IMPLS:
+        acc = _accuracy(params, cfg, impl)
+        em = softmax_error_metrics(impl)
+        report(f"table1,{impl},acc={acc:.4f},delta={acc - base:+.4f},"
+               f"mean_abs={em['mean_abs']:.5f},max_abs={em['max_abs']:.4f},"
+               f"kl={em['mean_kl']:.5f}")
+    return base

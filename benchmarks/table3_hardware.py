@@ -1,0 +1,21 @@
+"""Paper Table 3 (hardware cost) — fabric-free reproduction.
+
+Two complementary views (DESIGN.md §2):
+  1. The op-count cost model (core.costmodel): area/latency/FOM per softmax
+     design at N=8, W=16/32 — reproduces the paper's ordering and the
+     ~15x resource / large latency gains vs the all-FP32 engine.
+  2. Measured wall-time of the jitted emulations on attention-shaped rows
+     (bench_softmax) — the software-visible latency ranking.
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import table3
+
+
+def run(report):
+    for r in table3(N=8):
+        report(
+            f"table3,{r['name']},area={r['area']:.0f},latency={r['latency']:.1f},"
+            f"period={r['period']:.1f},fom={r['fom'] * 1000:.2f},"
+            f"area_x_fp32={r['area_ratio_vs_fp32']:.1f},"
+            f"latency_x_fp32={r['latency_ratio_vs_fp32']:.1f}")

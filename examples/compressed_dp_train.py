@@ -1,0 +1,68 @@
+"""Distributed-optimization demo: int8 stochastic-rounding gradient
+all-reduce inside a shard_map data-parallel training step.
+
+On a 1000+-node fleet the cross-pod DP gradient reduce is the dominant
+inter-pod collective; quantizing the payload to int8 cuts that roofline
+term ~4x (fp32 grads).  This example trains the same tiny LM twice — exact
+fp32 psum vs int8 compressed psum — and shows the loss curves coincide
+(stochastic rounding keeps the estimator unbiased).
+
+Run:  PYTHONPATH=src python examples/compressed_dp_train.py
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, lm_batch
+from repro.models import build_model
+from repro.models.layers import unbox
+from repro.optim.compression import compressed_psum_tree
+
+cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=4, d_head=16, d_ff=256, vocab=128,
+                  softmax_impl="hyft16", tie_embeddings=True,
+                  compute_dtype="float32")
+model = build_model(cfg)
+ocfg = optim.OptConfig(name="adamw", lr=3e-3, weight_decay=0.0)
+dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+
+
+def make_step(compress: bool):
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(), P(), P("dp"), P("dp"), P()),
+             out_specs=(P(), P(), P()))
+    def dp_step(params, opt, tokens, targets, key):
+        batch = {"tokens": tokens, "targets": targets,
+                 "mask": jnp.ones_like(targets, jnp.float32)}
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat="none", z_loss=0.0)[0])(params)
+        if compress:
+            grads = compressed_psum_tree(grads, "dp", key)
+            n = jax.lax.psum(1, "dp")
+            grads = jax.tree.map(lambda g: g / n, grads)
+        else:
+            grads = jax.lax.pmean(grads, "dp")
+        loss = jax.lax.pmean(loss, "dp")
+        new_params, new_opt = optim.update(ocfg, grads, opt, params)
+        return new_params, new_opt, loss
+    return jax.jit(dp_step)
+
+
+for compress in (False, True):
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    opt = optim.init(ocfg, params)
+    step = make_step(compress)
+    losses = []
+    for s in range(60):
+        b = lm_batch(dcfg, s)
+        key = jax.random.fold_in(jax.random.PRNGKey(7), s)
+        params, opt, loss = step(params, opt, b["tokens"], b["targets"], key)
+        losses.append(float(loss))
+    label = "int8-compressed" if compress else "exact fp32     "
+    print(f"{label} psum: loss {losses[0]:.3f} -> {losses[-1]:.3f}")

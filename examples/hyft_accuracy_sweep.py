@@ -1,0 +1,45 @@
+"""Sweep the accelerator's reconfigurable knobs (paper §3.1/§3.3):
+Precision (frac_bits), adder-tree width (acc_bits), STEP, and io format —
+the accuracy/hardware trade-off surface.
+
+Run:  PYTHONPATH=src python examples/hyft_accuracy_sweep.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hyft import HYFT16, HYFT32, hyft_softmax_fwd
+from repro.core.costmodel import hyft_cost
+
+key = jax.random.PRNGKey(0)
+z = jax.random.normal(key, (256, 128), jnp.float32) * 3.0
+ref = jax.nn.softmax(z, -1)
+
+
+def err(cfg):
+    s = hyft_softmax_fwd(z, cfg).astype(jnp.float32)
+    return float(jnp.mean(jnp.abs(s - ref)))
+
+
+print("== Precision (frac_bits) sweep, Hyft32 base ==")
+for f in (8, 10, 12, 16, 20):
+    cfg = dataclasses.replace(HYFT32, frac_bits=f, mant_bits=min(f, 16),
+                              acc_bits=min(f + 4, 22))
+    print(f"frac_bits={f:2d}  mean|err|={err(cfg):.5f}")
+
+print("== adder-tree acc_bits sweep ==")
+for a in (8, 10, 14, 20):
+    cfg = dataclasses.replace(HYFT32, acc_bits=a)
+    print(f"acc_bits={a:2d}   mean|err|={err(cfg):.5f}")
+
+print("== STEP sweep (max-search stride) with hardware cost ==")
+for s in (1, 2, 4, 8):
+    cfg = dataclasses.replace(HYFT16, step=s)
+    c = hyft_cost(N=8, W=16, step=s)
+    print(f"step={s}  mean|err|={err(cfg):.5f}  stage1_delay={c.stage_delays[0]:.2f}")
+
+print("== io formats ==")
+for cfg, name in ((HYFT16, "hyft16"), (HYFT32, "hyft32"),
+                  (dataclasses.replace(HYFT16, io_dtype="bfloat16"), "hyft16b")):
+    print(f"{name}: mean|err|={err(cfg):.5f}")

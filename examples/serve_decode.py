@@ -1,0 +1,23 @@
+"""Serve a small model with batched requests: prefill + greedy decode,
+with the Hyft softmax in every attention layer and the router.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ServeConfig
+from repro.models import build_model
+from repro.models.layers import unbox
+from repro.serve.engine import generate
+
+for arch in ["qwen2-1.5b", "mamba2-370m", "phi3.5-moe-42b-a6.6b"]:
+    cfg = smoke_config(get_config(arch)).with_(softmax_impl="hyft16")
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                          cfg.vocab, jnp.int32)}
+    scfg = ServeConfig(max_len=32, cache_dtype="float32")
+    out = generate(model, params, batch, scfg, max_new=8)
+    print(f"{arch:24s} generated {out.shape}: {out[0].tolist()}")

@@ -1,0 +1,7 @@
+"""repro: Hyft (hybrid-numeric-format softmax) as a multi-pod JAX framework.
+
+Layers: core (the paper's technique), kernels (Pallas TPU), models (10 assigned
+architectures), configs, data, optim, checkpoint, distributed, train, serve,
+launch (mesh + dry-run + CLIs), roofline.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,117 @@
+"""Config dataclasses: model / train / serve / mesh.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own module
+(``repro/configs/<id>.py``); ``repro.configs.get_config(name)`` resolves it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+
+    act: str = "silu"
+    mlp_gated: bool = True
+    norm: str = "rms"                # rms | ln | np_ln
+    qkv_bias: bool = False
+    rope_theta: Optional[float] = 10000.0
+    max_seq: int = 131072
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_group: int = 512             # dispatch group size (memory bound)
+
+    # SSM (Mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    attn_every: int = 0              # hybrid: shared attn after every N ssm blocks
+
+    # enc-dec / stub frontends
+    enc_layers: int = 0
+    frontend_dim: int = 0            # stub frame/patch embedding width
+    frontend_len: int = 0            # stub sequence length (patches / frames)
+
+    # the paper's technique + execution knobs
+    softmax_impl: str = "hyft32"
+    attn_mode: str = "unfused"       # unfused | chunked | kernel
+    attn_chunk: int = 512
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # long-context capability marker (sub-quadratic decode path exists)
+    subquadratic: bool = False
+    # prefill strategy: False = naive token-scan (baseline), True = one-pass
+    # chunked-SSD / teacher-forced cache fill (§Perf lever)
+    parallel_prefill: bool = False
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatch: int = 0              # 0 = no gradient accumulation
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # adamw | sgd | adafactor
+    remat: str = "full"              # none | full | dots
+    z_loss: float = 1e-4
+    moe_aux_weight: float = 0.01
+    grad_compression: str = "none"   # none | int8
+    master_dtype: str = "float32"
+    seed: int = 0
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    prefill_len: int = 128
+    max_len: int = 256
+    cache_dtype: str = "bfloat16"
+    seq_parallel: bool = False       # sequence-parallel decode attention
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: tuple = (16, 16)
+    axes: tuple = ("data", "model")
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes

@@ -1,0 +1,101 @@
+"""Assigned input-shape sets + ShapeDtypeStruct input specs per (arch, shape).
+
+Shapes (per assignment):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill (serve)
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token,
+                                                 KV/state cache of seq_len)
+  long_500k    seq 524288, global_batch 1     -> serve_step; ONLY for
+               sub-quadratic archs (ssm/hybrid), skipped + recorded for the
+               eight pure full-attention archs (DESIGN.md §5).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no allocation).
+Decode cache specs are derived separately via ``jax.eval_shape`` of the
+model's ``init_cache`` in the dry-run driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable? Returns (ok, reason-if-not)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k-token decode requires "
+                       "a sub-quadratic path (DESIGN.md §5)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input stand-ins for one cell (no device allocation)."""
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": _sds((B, cfg.frontend_len, cfg.frontend_dim), F32),
+                    "tokens": _sds((B, S), I32),
+                    "targets": _sds((B, S), I32),
+                    "mask": _sds((B, S), F32)}
+        if cfg.family == "vlm":
+            s_txt = S - cfg.frontend_len
+            return {"embeds": _sds((B, cfg.frontend_len, cfg.frontend_dim), F32),
+                    "tokens": _sds((B, s_txt), I32),
+                    "targets": _sds((B, s_txt), I32),
+                    "mask": _sds((B, s_txt), F32)}
+        return {"tokens": _sds((B, S), I32),
+                "targets": _sds((B, S), I32),
+                "mask": _sds((B, S), F32)}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": _sds((B, cfg.frontend_len, cfg.frontend_dim), F32),
+                    "tokens": _sds((B, S), I32)}
+        if cfg.family == "vlm":
+            return {"embeds": _sds((B, cfg.frontend_len, cfg.frontend_dim), F32),
+                    "tokens": _sds((B, S - cfg.frontend_len), I32)}
+        return {"tokens": _sds((B, S), I32)}
+    # decode: one new token against a cache of length S
+    return {"tokens": _sds((B, 1), I32)}
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, key=None) -> dict:
+    """Tiny concrete batch matching input_specs (for smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == I32:
+            key, sub = jax.random.split(key)
+            out[k] = jax.random.randint(sub, s.shape, 0, max(cfg.vocab, 2), I32)
+        else:
+            key, sub = jax.random.split(key)
+            out[k] = jax.random.normal(sub, s.shape, F32)
+    if "mask" in out:
+        out["mask"] = jnp.ones_like(out["mask"])
+    return out

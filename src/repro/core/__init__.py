@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — Hyft hybrid-format softmax (fwd + bwd)."""
+from repro.core.hyft import (  # noqa: F401
+    HYFT16,
+    HYFT16B,
+    HYFT32,
+    HyftConfig,
+    hyft_jacobian,
+    hyft_softmax,
+    hyft_softmax_bwd,
+    hyft_softmax_fwd,
+)
+from repro.core.registry import available, get_softmax, register_softmax  # noqa: F401

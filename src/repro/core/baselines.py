@@ -1,0 +1,122 @@
+"""Baseline softmax implementations the paper compares against (Table 1/3).
+
+Each baseline is emulated at the same bit-level fidelity as Hyft so the
+accuracy comparisons in ``benchmarks/table1_accuracy.py`` are meaningful:
+
+  exact      -- jax.nn.softmax (fp32), the "Original" row.
+  base2      -- [29] Zhang et al., TCAS-I'22: replaces e^x by 2^x entirely
+                (changes the *function* -- needs fine-tuning, large drop).
+  koca       -- [13] Koca et al., ISCAS'23: same 2^u(1+v/2) exponent path as
+                Hyft, but the divisor is rounded to a power of two so the
+                division becomes a pure shift (aggressive, hurts accuracy).
+  lut8       -- [23] Vasyltsov & Chang: 8-bit fixed-point LUT exp + LUT
+                reciprocal (needs input-distribution knowledge).
+  softermax  -- [20] Stevens et al.: base-2 with online (running) max and
+                low-precision accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics as nm
+from repro.core.hyft import HyftConfig, HYFT32
+
+F32 = jnp.float32
+
+
+def exact_softmax(z: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(z.astype(F32), axis=axis).astype(z.dtype)
+
+
+def _fixed_exp2_fields(z, cfg: HyftConfig, use_log2e: bool):
+    """Shared pre-processor + exponent path; base-2 variants skip Booth."""
+    z_raw = nm.fp2fx(z.astype(F32), cfg.frac_bits, cfg.total_bits)
+    zmax = jnp.max(z_raw, axis=-1, keepdims=True)
+    d = z_raw - zmax
+    if use_log2e:
+        return nm.exp_unit(d, cfg.frac_bits, cfg.mant_bits)
+    # 2^d directly: same split/Taylor machinery on t = d
+    F = cfg.frac_bits
+    t = jnp.minimum(d, 0)
+    u = -((-t) >> F)
+    v_raw = t - (u << F)
+    e = u - 1
+    m_raw = (1 << F) + v_raw
+    ovf = m_raw == (1 << F)
+    e = jnp.where(ovf, e + 1, e)
+    m_raw = jnp.where(ovf, 0, m_raw)
+    if cfg.mant_bits < F:
+        m_raw = (m_raw >> (F - cfg.mant_bits)) << (F - cfg.mant_bits)
+    m_raw = nm._rescale(m_raw, F, cfg.mant_bits)
+    return e.astype(nm.I32), m_raw.astype(nm.I32)
+
+
+def base2_softmax(z: jax.Array, cfg: HyftConfig = HYFT32) -> jax.Array:
+    """[29]: s_i = 2^(z_i - zmax) / sum_j 2^(z_j - zmax)."""
+    e, m = _fixed_exp2_fields(z, cfg, use_log2e=False)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    denom = jnp.sum(addend, axis=-1, keepdims=True)
+    e_b, m_b = nm.lod_refloat(denom, cfg.mant_bits)
+    return nm.log_div(e, m, e_b, m_b, cfg.mant_bits).astype(z.dtype)
+
+
+def koca_softmax(z: jax.Array, cfg: HyftConfig = HYFT32) -> jax.Array:
+    """[13]: Hyft-style exponent, divisor rounded to a power of two (shift div)."""
+    e, m = _fixed_exp2_fields(z, cfg, use_log2e=True)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    denom = jnp.sum(addend, axis=-1, keepdims=True)
+    e_b, m_b = nm.lod_refloat(denom, cfg.mant_bits)
+    # round divisor to power of 2: mantissa >= 0.5 rounds the exponent up
+    e_b = jnp.where(m_b >= (1 << (cfg.mant_bits - 1)), e_b + 1, e_b)
+    out = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - e_b - cfg.mant_bits)
+    return out.astype(z.dtype)
+
+
+def lut8_softmax(z: jax.Array, lut_bits: int = 8, x_min: float = -8.0) -> jax.Array:
+    """[23]: 8-bit fixed input, LUT exp, LUT reciprocal.
+
+    The exp LUT spans [x_min, 0]; the reciprocal LUT spans [1, N] normalized.
+    Both LUTs are exact at their sample points (ROM contents), so the error
+    is pure quantization -- matching the paper's characterization that [23]
+    degrades via "limited precision and range" of 8-bit fixed point.
+    """
+    n = 1 << lut_bits
+    z32 = z.astype(F32)
+    d = jnp.clip(z32 - jnp.max(z32, axis=-1, keepdims=True), x_min, 0.0)
+    idx = jnp.round((d - x_min) / (-x_min) * (n - 1)).astype(jnp.int32)
+    exp_lut = jnp.exp(jnp.linspace(x_min, 0.0, n, dtype=F32))
+    # LUT values stored as 8-bit fixed point in (0,1]
+    exp_lut = jnp.round(exp_lut * (n - 1)) / (n - 1)
+    ex = exp_lut[idx]
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    # normalize denom to [1,2), 8-bit reciprocal LUT over the mantissa
+    eb = jnp.floor(jnp.log2(denom))
+    mant = denom / jnp.exp2(eb)  # [1,2)
+    midx = jnp.clip(((mant - 1.0) * n).astype(jnp.int32), 0, n - 1)
+    recip_lut = 1.0 / (1.0 + (jnp.arange(n, dtype=F32) + 0.5) / n)
+    recip_lut = jnp.round(recip_lut * (n - 1)) / (n - 1)
+    out = ex * recip_lut[midx] * jnp.exp2(-eb)
+    return out.astype(z.dtype)
+
+
+def softermax(z: jax.Array, cfg: HyftConfig | None = None) -> jax.Array:
+    """[20]: base-2, online max/sum accumulation, low-precision accumulator.
+
+    Emulated with a fori-style running scan over the row (mathematically the
+    final result equals base-2 softmax with a quantized running accumulator).
+    """
+    cfg = cfg or dataclasses.replace(HYFT32, frac_bits=8, mant_bits=8,
+                                     acc_bits=12, total_bits=16)
+    return base2_softmax(z, cfg)
+
+
+BASELINES = {
+    "exact": lambda z: exact_softmax(z),
+    "base2": lambda z: base2_softmax(z),
+    "koca": lambda z: koca_softmax(z),
+    "lut8": lambda z: lut8_softmax(z),
+    "softermax": lambda z: softermax(z),
+}

@@ -1,0 +1,169 @@
+"""Hyft softmax — pure-JAX, bit-level-faithful emulation (fwd + bwd).
+
+This is the paper's contribution as a composable JAX module.  The Pallas
+kernels in ``repro.kernels`` implement the identical arithmetic with int32
+bit manipulation; this module is the oracle they are validated against, and
+it is also what runs inside every model when ``softmax="hyft*"`` is selected
+(on CPU, or when kernels are disabled).
+
+The emulation follows the four hardware blocks exactly (see DESIGN.md §1-2):
+
+  pre-processor  : strided max (STEP) + FP2FX @ ``frac_bits`` (Precision)
+  exponent unit  : shift-add z*log2e -> split u,v -> 2**(u-1)(1+(1+v)) fields
+  adder tree     : FP2FX @ ``acc_bits`` -> exact accumulate -> LOD refloat
+  div/mul unit   : log-subtract divide; log-domain multiply for backward
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics as nm
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class HyftConfig:
+    """Reconfigurable parameters of the accelerator (paper §3.1/§3.3).
+
+    Attributes:
+      io_dtype:   input/output format ("float16" = Hyft16, "float32" = Hyft32,
+                  "bfloat16" = Hyft16b, our TPU-native extension).
+      total_bits: width W of the fixed-point input format (pre-processor).
+      frac_bits:  the ``Precision`` parameter -- fractional bits of the
+                  fixed-point input format.
+      mant_bits:  mantissa bits carried by the intermediate float fields.
+      acc_bits:   fractional bits of the hybrid adder tree (values in (0,1]).
+      step:       STEP parameter of the strided max search (1 = exact max).
+      grad:       "hyft" = backward via the reused div/mul unit (paper §3.5);
+                  "exact" = exact softmax VJP (ablation).
+      bwd_acc_bits: adder-tree precision for the backward dot product.
+    """
+
+    io_dtype: str = "float32"
+    total_bits: int = 24
+    frac_bits: int = 16
+    mant_bits: int = 16
+    acc_bits: int = 20
+    step: int = 1
+    grad: Literal["hyft", "exact"] = "hyft"
+    bwd_acc_bits: int = 16
+
+    def __post_init__(self):
+        assert self.frac_bits < self.total_bits <= 31
+        assert self.mant_bits <= self.frac_bits, "mantissa derives from v's frac bits"
+        assert self.acc_bits <= 22, "adder tree addends must stay exact in fp32"
+        assert self.step >= 1
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.io_dtype)
+
+
+# Hyft16 / Hyft32 presets from the paper's two evaluated configurations.
+HYFT16 = HyftConfig(io_dtype="float16", total_bits=16, frac_bits=10,
+                    mant_bits=10, acc_bits=14, bwd_acc_bits=12)
+HYFT32 = HyftConfig(io_dtype="float32", total_bits=24, frac_bits=16,
+                    mant_bits=16, acc_bits=20, bwd_acc_bits=16)
+# TPU-native extension (bf16 I/O keeps the wide exponent; same internal path).
+HYFT16B = dataclasses.replace(HYFT16, io_dtype="bfloat16")
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def strided_max(z_raw: jax.Array, step: int) -> jax.Array:
+    """Approximate max search over every ``step``-th element (paper §3.1)."""
+    if step > 1:
+        z_raw = z_raw[..., ::step]
+    return jnp.max(z_raw, axis=-1, keepdims=True)
+
+
+def hyft_exp_fields(z: jax.Array, cfg: HyftConfig) -> tuple[jax.Array, jax.Array]:
+    """Pre-processor + exponent unit: float z -> (e, m) fields of exp(z-zmax)."""
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    zmax_raw = strided_max(z_raw, cfg.step)
+    d = z_raw - zmax_raw
+    return nm.exp_unit(d, cfg.frac_bits, cfg.mant_bits)
+
+
+def hyft_softmax_fwd(z: jax.Array, cfg: HyftConfig) -> jax.Array:
+    """Forward Hyft softmax along the last axis."""
+    e, m = hyft_exp_fields(z.astype(F32), cfg)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    denom = jnp.sum(addend, axis=-1, keepdims=True)
+    e_b, m_b = nm.lod_refloat(denom, cfg.mant_bits)
+    out = nm.log_div(e, m, e_b, m_b, cfg.mant_bits)
+    return out.astype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# backward (paper §3.5: reuse of the div/mul unit + adder tree)
+# --------------------------------------------------------------------------
+
+
+def hyft_softmax_bwd(s: jax.Array, dy: jax.Array, cfg: HyftConfig) -> jax.Array:
+    """dz = s * (dy - <dy, s>) with Hyft's approximate arithmetic.
+
+    Each product runs through the log-domain multiplier with the half-range
+    mantissa (Eq. 10); the dot product reuses the (signed) fixed-point adder
+    tree; the final elementwise product reuses the multiplier again.
+    """
+    s32, dy32 = s.astype(F32), dy.astype(F32)
+    prods = nm.log_mul(dy32, s32, cfg.mant_bits, half_range=True)
+    prods_q = nm.fx_quantize(prods, cfg.bwd_acc_bits)
+    dot = jnp.sum(prods_q, axis=-1, keepdims=True)
+    diff = nm.fx_quantize(dy32, cfg.bwd_acc_bits) - dot  # exact fx subtract
+    dz = nm.log_mul(diff, s32, cfg.mant_bits, half_range=True)
+    return dz.astype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# public op with custom VJP
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def hyft_softmax(z: jax.Array, cfg: HyftConfig = HYFT32) -> jax.Array:
+    """Hyft softmax over the last axis, differentiable.
+
+    The VJP is the accelerator's own backward path when ``cfg.grad="hyft"``
+    (the paper's training mode), or the exact softmax VJP for ablations.
+    """
+    return hyft_softmax_fwd(z, cfg)
+
+
+def _fwd(z, cfg):
+    s = hyft_softmax_fwd(z, cfg)
+    return s, (s, jnp.zeros((0,), z.dtype))  # carry primal dtype for the VJP
+
+
+def _bwd(cfg, res, dy):
+    s, dt_marker = res
+    if cfg.grad == "exact":
+        s32, dy32 = s.astype(F32), dy.astype(F32)
+        dz = s32 * (dy32 - jnp.sum(dy32 * s32, axis=-1, keepdims=True))
+        return (dz.astype(dt_marker.dtype),)
+    return (hyft_softmax_bwd(s, dy, cfg).astype(dt_marker.dtype),)
+
+
+hyft_softmax.defvjp(_fwd, _bwd)
+
+
+def hyft_jacobian(s: jax.Array, cfg: HyftConfig = HYFT32) -> jax.Array:
+    """Full Jacobian  ds/dz = diag(s) - s s^T  (paper Eq. 5), via log_mul.
+
+    Exposed for the paper-faithful N x N backward block; the VJP above is the
+    matrix-free form used in training.
+    """
+    s32 = s.astype(F32)
+    outer = nm.log_mul(s32[..., :, None], s32[..., None, :], cfg.mant_bits)
+    diag = jnp.eye(s.shape[-1], dtype=F32) * s32[..., None, :]
+    return (diag - outer).astype(cfg.dtype)

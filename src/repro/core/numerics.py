@@ -1,0 +1,226 @@
+"""Bit-level numeric-format emulation primitives for Hyft.
+
+Hyft's contribution is *adaptive format conversion*: every intermediate value is
+carried in whichever format (fixed point vs. float exponent/mantissa fields)
+makes the next arithmetic op cheap.  This module provides the exact arithmetic
+of each hardware block, emulated with int32 raws / exact fp32 ops so that the
+pure-JAX reference and the Pallas kernels are bit-identical.
+
+Conventions
+-----------
+* A fixed-point value with ``frac_bits=F`` is an int32 ``raw`` with value
+  ``raw / 2**F`` (two's complement; arithmetic right shifts == floor division).
+* A custom float is an (exponent ``e``:int32, mantissa ``m_raw``:int32) pair
+  with value ``2**e * (1 + m_raw / 2**F)``, ``0 <= m_raw < 2**F`` (normalized).
+* All helpers are shape-polymorphic and vectorize over leading axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+# --------------------------------------------------------------------------
+# fixed-point <-> float conversion (the FP2FX / FX2FP blocks)
+# --------------------------------------------------------------------------
+
+
+def fp2fx(x: jax.Array, frac_bits: int, total_bits: int) -> jax.Array:
+    """Float -> fixed point raw (int32), round-to-nearest, saturating.
+
+    Emulates the parameterized FP2FX converter of the input pre-processor
+    (paper §3.1, ``Precision`` = ``frac_bits``).  +-inf saturate; NaN -> 0 is
+    NOT special-cased (garbage-in behaviour matches hardware).
+    """
+    lo = -(2 ** (total_bits - 1))
+    hi = 2 ** (total_bits - 1) - 1
+    scaled = x.astype(F32) * F32(2.0**frac_bits)
+    # rint == round-half-even, the usual RTL rounding choice for converters.
+    return jnp.clip(jnp.rint(scaled), lo, hi).astype(I32)
+
+
+def fx2fp(raw: jax.Array, frac_bits: int) -> jax.Array:
+    """Fixed point raw -> fp32 (exact while |raw| < 2**24)."""
+    return raw.astype(F32) * F32(2.0**-frac_bits)
+
+
+def pow2_float(k: jax.Array) -> jax.Array:
+    """Assemble the fp32 value ``2.0**k`` by writing the exponent field.
+
+    This is the zero-shifter float assembly Hyft relies on: on TPU it is a
+    couple of integer VPU ops.  Out-of-range exponents flush to zero
+    (k <= -127) or saturate to 2**127 (k >= 128) -- hardware FTZ behaviour.
+    """
+    k = k.astype(I32)
+    biased = jnp.clip(k + 127, 0, 255)
+    val = jax.lax.bitcast_convert_type((biased << 23).astype(I32), F32)
+    return jnp.where(biased <= 0, F32(0.0), val)
+
+
+def float_fields(x: jax.Array, mant_bits: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decompose fp32 ``x`` -> (sign, exponent, mantissa raw @ mant_bits).
+
+    Mantissa is truncated (not rounded) to ``mant_bits`` -- the LOD + shifter
+    in hardware drops low bits.  Zero/subnormal inputs map to a canonical
+    (sign, -127, 0) triple which downstream blocks flush to zero.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(F32), I32)
+    sign = (bits >> 31) & 1
+    e = ((bits >> 23) & 0xFF) - 127
+    m = (bits >> (23 - mant_bits)) & ((1 << mant_bits) - 1)
+    return sign.astype(I32), e.astype(I32), m.astype(I32)
+
+
+def assemble_float(sign: jax.Array, e: jax.Array, m_raw: jax.Array, mant_bits: int) -> jax.Array:
+    """(sign, e, m_raw @ mant_bits) -> fp32 value, with FTZ on underflow."""
+    mag = (F32(2.0**mant_bits) + m_raw.astype(F32)) * pow2_float(e - mant_bits)
+    return jnp.where(sign == 1, -mag, mag)
+
+
+# --------------------------------------------------------------------------
+# the hybrid exponent unit (paper §3.2)
+# --------------------------------------------------------------------------
+
+
+def booth_log2e(d_raw: jax.Array) -> jax.Array:
+    """Booth-encoded shift-add approximation of ``d * log2(e)``.
+
+    ``z'*log2e ~= z' + (z' >> 1) - (z' >> 4)``  (1.4375 vs 1.44269...).
+    Arithmetic right shifts (floor) exactly as in two's-complement RTL.
+    """
+    return d_raw + (d_raw >> 1) - (d_raw >> 4)
+
+
+def exp_unit(d_raw: jax.Array, frac_bits: int, mant_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Hybrid exponent unit: fixed-point ``d = z - zmax`` (<=0) -> float fields.
+
+    Returns (e, m_raw) with value ``2**e * (1 + m_raw/2**mant_bits)``
+    approximating ``exp(d)``:
+
+      t = d*log2e (shift-add);  u = ceil(t) <= 0;  v = t - u in (-1, 0]
+      exp(d) ~= 2**(u+v) ~= 2**u (1 + v/2) = 2**(u-1) (1 + (1+v))
+
+    so exponent field u-1 and mantissa 1+v -- materialized directly, no
+    shifter (paper Eq. 8).  The mantissa is then truncated to ``mant_bits``.
+    """
+    F = frac_bits
+    t = booth_log2e(d_raw)
+    t = jnp.minimum(t, 0)  # saturate: strided-max may leave d > 0 (paper §3.1)
+    # ceil(t / 2**F) for t <= 0 via neg-floor-neg; v_raw = t - (u << F) in (-2**F, 0]
+    u = -((-t) >> F)
+    v_raw = t - (u << F)
+    e = u - 1
+    m_raw = (1 << F) + v_raw  # 1 + v, in (0, 2**F]
+    # normalize the m == 1.0 edge (v == 0): 2**(u-1)*2 == 2**u * 1.0
+    overflow = m_raw == (1 << F)
+    e = jnp.where(overflow, e + 1, e)
+    m_raw = jnp.where(overflow, 0, m_raw)
+    # truncate mantissa to the configured intermediate precision
+    if mant_bits < F:
+        m_raw = (m_raw >> (F - mant_bits)) << (F - mant_bits)
+    # rescale raw to mant_bits so downstream blocks share one scale
+    m_raw = _rescale(m_raw, F, mant_bits)
+    return e.astype(I32), m_raw.astype(I32)
+
+
+def _rescale(raw: jax.Array, src_bits: int, dst_bits: int) -> jax.Array:
+    if dst_bits == src_bits:
+        return raw
+    if dst_bits < src_bits:
+        return raw >> (src_bits - dst_bits)
+    return raw << (dst_bits - src_bits)
+
+
+# --------------------------------------------------------------------------
+# the hybrid adder tree (paper §3.3)
+# --------------------------------------------------------------------------
+
+
+def expfloat_to_fx(e: jax.Array, m_raw: jax.Array, mant_bits: int, acc_bits: int) -> jax.Array:
+    """FP2FX at the adder-tree input: value in (0,1] -> fp32 multiple of 2**-acc_bits.
+
+    The quantized value ``floor(val * 2**acc_bits) * 2**-acc_bits`` is returned
+    *as fp32* (exact: it is an integer < 2**(acc_bits+1) scaled).  The adder
+    tree then accumulates these in fp32, which is exact as long as the running
+    sum stays below 2**24 ulps of 2**-acc_bits; both the reference and the
+    kernels use the identical accumulation so they agree bit-for-bit (see
+    DESIGN.md §2 for the int-width discussion).
+    """
+    # raw integer at acc_bits scale: (2**mant + m) << (e + acc - mant), >> if negative
+    shift = e + acc_bits - mant_bits
+    base = (1 << mant_bits) + m_raw
+    pos = base << jnp.maximum(shift, 0)
+    neg = base >> jnp.minimum(-shift, 31)
+    q = jnp.where(shift >= 0, pos, neg)
+    # guard: e <= 0 always here, so q <= 2**acc_bits; flush e < -acc_bits-mant to 0
+    q = jnp.where(shift <= -32, 0, q)
+    return q.astype(F32) * F32(2.0**-acc_bits)
+
+
+def lod_refloat(s: jax.Array, mant_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Leading-one detector: fp32 sum -> (e, m_raw @ mant_bits), truncating.
+
+    Extracting the fields of the fp32 accumulator *is* the LOD + shift: the
+    fp32 value is already normalized, we only drop mantissa bits below
+    ``mant_bits``.
+    """
+    _, e, m = float_fields(s, mant_bits)
+    return e, m
+
+
+# --------------------------------------------------------------------------
+# the hybrid DIV / MUL unit (paper §3.4 / §3.5)
+# --------------------------------------------------------------------------
+
+
+def log_div(e_a: jax.Array, m_a: jax.Array, e_b: jax.Array, m_b: jax.Array,
+            mant_bits: int) -> jax.Array:
+    """Log-subtract division  a/b ~= 2**(e_a-e_b+m_a-m_b)  (paper Eq. 9).
+
+    Taylor ``log2(1+x) ~= x`` turns the divide into field subtraction; the
+    combined log ``(e_a-e_b) + (m_a-m_b)`` is re-split into integer exponent
+    and fractional mantissa (a conditional 1-bit renorm in hardware -- the
+    emitted FP16/FP32 output must carry a non-negative mantissa), then
+    ``2**frac ~= 1+frac`` maps back out of log space.
+    """
+    diff = m_a - m_b  # in (-2**mant, 2**mant)
+    neg = diff < 0
+    e = e_a - e_b + jnp.where(neg, -1, 0)
+    m = jnp.where(neg, (1 << mant_bits) + diff, diff)  # in [0, 2**mant)
+    return ((1 << mant_bits) + m).astype(F32) * pow2_float(e - mant_bits)
+
+
+def log_mul(a: jax.Array, b: jax.Array, mant_bits: int, half_range: bool = True) -> jax.Array:
+    """Hybrid float multiply  a*b ~= 2**(ea+eb) (1 + ma + mb + ma*mb).
+
+    Used by the backward pass (paper Eq. 10).  ``half_range=True`` truncates
+    b's mantissa to ``mant_bits//2`` bits before the partial product -- the
+    50%-smaller multiplier of §3.5.
+    """
+    F = mant_bits
+    sa, ea, ma = float_fields(a, F)
+    sb, eb, mb = float_fields(b, F)
+    if half_range:
+        top = F - F // 2
+        mb_top = mb >> top          # top F//2 bits, value mb_top / 2**(F//2)
+        prod = (ma * mb_top) >> (F // 2)   # back to F-scale
+    else:
+        prod = (ma * mb) >> F
+    num = (1 << F) + ma + mb + prod       # in (2**F, 4*2**F)
+    mag = num.astype(F32) * pow2_float(ea + eb - F)
+    sign = sa ^ sb
+    zero = (a == 0.0) | (b == 0.0)
+    out = jnp.where(sign == 1, -mag, mag)
+    return jnp.where(zero, F32(0.0), out)
+
+
+def fx_quantize(x: jax.Array, frac_bits: int) -> jax.Array:
+    """Two's-complement truncation to ``frac_bits`` fractional bits, in fp32.
+
+    ``floor(x * 2**F) / 2**F`` -- used by the backward adder tree on signed
+    addends.  Exact in fp32 for |x| < 2**(24-F).
+    """
+    s = F32(2.0**frac_bits)
+    return jnp.floor(x.astype(F32) * s) * F32(1.0 / s)

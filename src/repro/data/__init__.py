@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, classify_batch, lm_batch  # noqa: F401

@@ -1,0 +1,91 @@
+"""Fault tolerance: restart manager, straggler monitor, elastic re-meshing.
+
+Large-fleet posture (DESIGN.md §4):
+  * RestartManager — supervises the train loop; on failure it reloads the
+    latest *atomic* checkpoint and retries (bounded).  On a real cluster the
+    same manager runs under the cluster scheduler; node loss surfaces as an
+    exception here exactly as a collective timeout does there.
+  * StragglerMonitor — per-step wall-time EMA + MAD outlier detection; on a
+    fleet this feeds hot-spare swap / within-step backup execution, here it
+    logs and counts (tested with injected delays).
+  * elastic_remesh — rebuilds a (data, model) mesh from the devices still
+    alive (data axis shrinks, model axis is sacred: TP groups must stay
+    whole), and checkpoints re-shard on restore (`checkpointer.restore`
+    takes new shardings) — that is elastic scaling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import checkpointer
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    ema: float = 0.0
+    beta: float = 0.9
+    threshold: float = 3.0
+    warm: int = 5
+    seen: int = 0
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self.seen += 1
+        if self.seen <= self.warm:
+            self.ema = dt if self.ema == 0 else (self.beta * self.ema
+                                                 + (1 - self.beta) * dt)
+            return False
+        is_straggler = dt > self.threshold * max(self.ema, 1e-9)
+        if is_straggler:
+            self.flagged += 1
+        else:  # don't pollute the EMA with outliers
+            self.ema = self.beta * self.ema + (1 - self.beta) * dt
+        return is_straggler
+
+
+def elastic_remesh(model_size: int, axes=("data", "model"),
+                   devices=None):
+    """Mesh from whatever devices are alive; data axis absorbs the loss."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if n % model_size:
+        usable = (n // model_size) * model_size
+        devices = devices[:usable]
+        n = usable
+    if n == 0:
+        raise RuntimeError("not enough devices to keep a model-parallel group")
+    import numpy as np
+    arr = np.array(devices).reshape(n // model_size, model_size)
+    from jax.sharding import Mesh
+    return Mesh(arr, axes)
+
+
+@dataclasses.dataclass
+class RestartManager:
+    ckpt_dir: str
+    max_restarts: int = 3
+    on_restart: Optional[Callable[[int], None]] = None
+
+    def run(self, body: Callable[[int], int]) -> int:
+        """``body(start_step) -> final_step`` — rerun from the latest
+        checkpoint on failure."""
+        restarts = 0
+        while True:
+            start = checkpointer.latest_step(self.ckpt_dir)
+            start = 0 if start is None else start
+            try:
+                return body(start)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:  # noqa: BLE001 — any node failure mode
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                if self.on_restart:
+                    self.on_restart(restarts)
+                time.sleep(0.01)

@@ -1,0 +1,186 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Params carry *logical* axis names (``repro.models.layers.Param``); a rules
+table maps them to mesh axes.  Rules are per-arch-overridable — this is the
+primary §Perf hillclimb lever (changing one rule re-shards the whole model).
+
+Conventions:
+  batch       -> (pod, data)      activations' batch dim
+  heads/mlp/  -> model            tensor parallelism
+  vocab/experts
+  embed       -> fsdp axes for big archs (ZeRO-3), replicated for small
+  kv_heads    -> model only when divisible, else replicated (GQA kv<16)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import boxed_axes, is_param
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (Megatron-style sequence parallelism lever)
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: list = []
+
+
+@contextlib.contextmanager
+def activation_rules(mesh, rules):
+    """While active, ``constrain_acts`` pins the residual stream's sharding
+    (batch over DP axes; seq over ``model`` iff rules["seq"] says so)."""
+    _ACT_CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.pop()
+
+
+def constrain_acts(x):
+    """Apply the (batch, seq, embed) activation constraint if a context is
+    active and the shape divides; no-op otherwise."""
+    if not _ACT_CTX or x.ndim != 3:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    spec = spec_for_axes(("batch", "seq", "embed"), rules)
+    spec = _divisible(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def default_rules(mesh, cfg=None, fsdp: bool = False) -> dict[str, Any]:
+    """Build the logical->mesh table for a given mesh (axes subset of
+    ("pod","data","model"))."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape.get("model", 1)
+    rules: dict[str, Any] = {
+        "batch": dp if len(dp) > 1 else (dp[0] if dp else None),
+        "seq": None,
+        "embed": dp if fsdp else None,     # ZeRO-3 over the data axes
+        "heads": model,
+        "kv_heads": None,                  # GQA: kv heads rarely divide 16
+        "head_dim": None,
+        "mlp": model,
+        "vocab": model,
+        "experts": model,
+        "experts_dim": None,
+        "layers": None,
+        None: None,
+    }
+    if cfg is not None:
+        if cfg.n_heads and model and cfg.n_heads % msize:
+            rules["heads"] = None
+        if cfg.n_kv_heads and model and cfg.n_kv_heads % msize == 0:
+            rules["kv_heads"] = model
+        if cfg.n_experts and model and cfg.n_experts % msize:
+            # few experts: shard experts over what divides, mlp picks up TP
+            rules["experts"] = None
+        if cfg.d_ff and model and cfg.d_ff % msize:
+            rules["mlp"] = None
+        if cfg.vocab and model and cfg.vocab % msize:
+            rules["vocab"] = None
+    return rules
+
+
+def spec_for_axes(axes, rules, shape=None) -> P:
+    """Logical axes tuple -> PartitionSpec, dropping non-divisible entries."""
+    if axes is None:
+        return P()
+    entries = []
+    used = set()
+    for i, a in enumerate(axes):
+        r = rules.get(a, None)
+        # one mesh axis may appear only once in a spec
+        flat = tuple(r) if isinstance(r, tuple) else ((r,) if r else ())
+        flat = tuple(x for x in flat if x not in used)
+        used.update(flat)
+        r = flat if len(flat) > 1 else (flat[0] if flat else None)
+        entries.append(r)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _divisible(spec: P, shape, mesh) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim."""
+    entries = []
+    for i, e in enumerate(spec):
+        if e is None:
+            entries.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        entries.append(e if shape[i] % n == 0 else None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(mesh, boxed_tree, rules):
+    """Boxed param pytree -> NamedSharding pytree (for jit in/out_shardings).
+
+    ``boxed_tree`` may hold Param(ShapeDtypeStruct) from ``jax.eval_shape``;
+    the leading scan ``layers`` axis is detected by rank mismatch and left
+    unsharded.
+    """
+    def one(p):
+        if not is_param(p):
+            return NamedSharding(mesh, P())
+        axes = p.axes
+        shape = p.value.shape
+        if len(axes) == len(shape) - 1:       # stacked scan layer axis
+            axes = ("layers",) + tuple(axes)
+        elif len(axes) == len(shape) - 2:     # nested stacking (hybrid groups)
+            axes = ("layers", "layers") + tuple(axes)
+        spec = spec_for_axes(axes, rules)
+        spec = _divisible(spec, shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, boxed_tree, is_leaf=is_param)
+
+
+def batch_shardings(mesh, batch_specs, rules):
+    """Input batch pytree -> NamedSharding with batch dim over DP axes."""
+    bspec = spec_for_axes(("batch",), rules)
+
+    def one(x):
+        spec = P(*(tuple(bspec)[0],)) if len(x.shape) >= 1 else P()
+        return NamedSharding(mesh, _divisible(spec, x.shape, mesh))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(mesh, cache_specs, rules, seq_axis_map=None):
+    """KV/state cache sharding for decode.
+
+    Attention KV caches (B, Hkv, S, D) [stacked (L, ...)]: batch over DP; the
+    sequence axis over ``model`` (sequence parallelism — the distributed Hyft
+    tree consumes it).  SSM states (B, H, P, N): heads over model.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def one(path, x):
+        keys = {getattr(k, "key", getattr(k, "name", None)) for k in path}
+        shape, r = x.shape, len(x.shape)
+        if keys & {"k", "v"}:        # attention KV: (L,)B,Hkv,S,D — SP on seq
+            spec = [None] * r
+            spec[r - 4], spec[r - 2] = dp, model
+        elif "ssm" in keys:          # SSD state: (L,)B,H,P,N — TP on heads
+            spec = [None] * r
+            spec[r - 4], spec[r - 3] = dp, model
+        elif "conv" in keys:         # conv window: (L,)B,K,C — TP on channels
+            spec = [None] * r
+            spec[r - 3], spec[r - 1] = dp, model
+        elif "memory" in keys:       # encoder memory: B,T,D
+            spec = [dp] + [None] * (r - 1)
+        else:
+            spec = ([dp] + [None] * (r - 1)) if r else []
+        return NamedSharding(mesh, _divisible(P(*spec), shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

@@ -1,0 +1,150 @@
+"""Fused flash attention with Hyft softmax — the TPU-native form of §3.6.
+
+The paper pipelines softmax's three stages (max | exp+sum | div) *across
+vectors* because one vector's stages are sequential.  On TPU the same row
+independence is exploited the opposite way: we stream KV blocks through VMEM
+and maintain *online* (max, sum, acc) state per query row, so stage 1/2/3 of
+consecutive blocks overlap inside one kernel — one HBM pass over K/V instead
+of the three passes an unfused QK^T -> softmax -> PV takes.  The paper's
+L1/L2 tree of Hyft units (Fig. 6) is exactly the associative (max,sum) merge
+used here blockwise (and cross-device in ``repro.models.attention``'s
+sequence-parallel decode).
+
+All softmax arithmetic inside is Hyft's: FP2FX, Booth shift-add, field
+assembly, fixed-point accumulation, and the final log-subtract division.
+The online rescale multiplies by the *Hyft-approximated* exp of the max
+delta (the DIV/MUL unit in rescale duty).
+
+Accumulator pattern: (bh, q, kv) grid with kv innermost; output blocks and
+the (m, l) stat blocks map to the same index for every kv step, so they stay
+resident in VMEM and serve as carry; finalization happens at the last step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import numerics as nm
+from repro.core.hyft import HyftConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+NEG_BIG = -3.0e38  # pre-quantization mask value; FP2FX saturates it to fx lo
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  cfg: HyftConfig, sm_scale: float, causal: bool,
+                  block_q: int, block_k: int, nk: int):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -(2 ** (cfg.total_bits - 1)))
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(F32)              # (bq, dh)
+    k = k_ref[0].astype(F32)              # (bk, dh)
+    v = v_ref[0].astype(F32)              # (bk, dh)
+    z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * sm_scale
+    if causal:
+        qi = iq * block_q + jax.lax.broadcasted_iota(I32, z.shape, 0)
+        ki = ik * block_k + jax.lax.broadcasted_iota(I32, z.shape, 1)
+        z = jnp.where(qi >= ki, z, NEG_BIG)
+
+    # ---- Hyft stage 1: FP2FX + (strided) block max, merged with running max
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
+    blk_max = jnp.max(zsub, axis=-1, keepdims=True)
+    m_old = m_ref[:, :1]
+    m_new = jnp.maximum(m_old, blk_max)
+
+    # ---- Hyft stage 2: exponent unit + fixed-point accumulation
+    e, m = nm.exp_unit(z_raw - m_new, cfg.frac_bits, cfg.mant_bits)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    l_blk = jnp.sum(addend, axis=-1, keepdims=True)
+
+    # online rescale of the carried sum/acc by the *Hyft* exp of the max delta
+    e_a, m_a = nm.exp_unit(m_old - m_new, cfg.frac_bits, cfg.mant_bits)
+    alpha = ((1 << cfg.mant_bits) + m_a).astype(F32) * nm.pow2_float(e_a - cfg.mant_bits)
+    l_new = nm.fx_quantize(l_ref[:, :1] * alpha, cfg.acc_bits) + l_blk
+
+    # ---- probabilities as assembled floats -> MXU matmul with V
+    p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=F32)
+    acc = o_ref[0].astype(F32) * alpha + pv
+
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+    # ---- Hyft stage 3: log-subtract division at the last kv step
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        e_b, m_b = nm.lod_refloat(l_ref[:, :1], cfg.mant_bits)
+        num = o_ref[0].astype(F32)
+        sg, e_n, m_n = nm.float_fields(num, cfg.mant_bits)
+        res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
+        res = jnp.where(sg == 1, -res, res)
+        res = jnp.where(num == 0.0, 0.0, res)
+        o_ref[...] = res[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "sm_scale", "causal", "block_q", "block_k", "interpret", "return_stats"))
+def flash_hyft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cfg: HyftConfig, sm_scale: float | None = None,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = True,
+                         return_stats: bool = False):
+    """Fused attention with Hyft softmax.
+
+    Args:
+      q: (B, Hq, Sq, D);  k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0 (GQA).
+    Returns (B, Hq, Sq, D) in fp32 (callers cast), plus (m, l) row stats when
+    ``return_stats`` (used by the cross-device sequence-parallel combine).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "pad sequence to block multiples"
+    q3 = q.reshape(B * Hq, Sq, D)
+    k3 = k.reshape(B * Hkv, Sk, D)
+    v3 = v.reshape(B * Hkv, Sk, D)
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B * Hq, nq, nk)
+
+    kern = functools.partial(_flash_kernel, cfg=cfg, sm_scale=scale,
+                             causal=causal, block_q=bq, block_k=bk, nk=nk)
+    o, m_st, l_st = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((bq, 128), lambda b, i, j, n=nq: (b * n + i, 0)),
+            pl.BlockSpec((bq, 128), lambda b, i, j, n=nq: (b * n + i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hq, Sq, D), F32),
+            jax.ShapeDtypeStruct((B * Hq * Sq, 128), I32),
+            jax.ShapeDtypeStruct((B * Hq * Sq, 128), F32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    out = o.reshape(B, Hq, Sq, D)
+    if return_stats:
+        return out, m_st[:, 0].reshape(B, Hq, Sq), l_st[:, 0].reshape(B, Hq, Sq)
+    return out

@@ -1,0 +1,50 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: compiled on TPU, interpreter elsewhere (this
+container is CPU-only; TPU is the lowering target).  ``hyft_softmax`` is
+differentiable — its VJP is the backward *kernel* (the accelerator's reused
+DIV/MUL datapath), mirroring ``repro.core.hyft.hyft_softmax``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.core.hyft import HyftConfig
+from repro.kernels import hyft_softmax as _hk
+from repro.kernels.flash_attention import flash_hyft_attention  # noqa: F401
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def hyft_softmax(z: jax.Array, cfg: HyftConfig) -> jax.Array:
+    return _hk.hyft_softmax_fwd_kernel(z, cfg, interpret=_auto_interpret())
+
+
+import jax.numpy as jnp
+
+
+def _fwd(z, cfg):
+    s = _hk.hyft_softmax_fwd_kernel(z, cfg, interpret=_auto_interpret())
+    return s, (s, jnp.zeros((0,), z.dtype))
+
+
+def _bwd(cfg, res, dy):
+    s, dt_marker = res
+    dz = _hk.hyft_softmax_bwd_kernel(s, dy, cfg, interpret=_auto_interpret())
+    return (dz.astype(dt_marker.dtype),)
+
+
+hyft_softmax.defvjp(_fwd, _bwd)
+
+
+def hyft_attention(q, k, v, cfg: HyftConfig, sm_scale=None, causal=True,
+                   block_q=128, block_k=128):
+    """Fused flash attention with Hyft softmax (forward; serving/prefill)."""
+    return flash_hyft_attention(q, k, v, cfg, sm_scale=sm_scale, causal=causal,
+                                block_q=block_q, block_k=block_k,
+                                interpret=_auto_interpret())

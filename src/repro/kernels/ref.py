@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact references).
+
+``hyft_softmax_ref`` / ``hyft_softmax_bwd_ref`` are the core emulation (the
+kernels trace the identical arithmetic, so equality is bitwise).
+``flash_hyft_attention_ref`` replays the *blocked online* algorithm of the
+fused kernel in plain jnp with the same block sizes — also bitwise — and
+``attention_ref`` is the unfused mathematical reference (tolerance-based
+comparison, quantifying the online-rescale drift).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics as nm
+from repro.core.hyft import HyftConfig, hyft_softmax_bwd, hyft_softmax_fwd
+
+F32 = jnp.float32
+I32 = jnp.int32
+NEG_BIG = -3.0e38
+
+
+def hyft_softmax_ref(z: jax.Array, cfg: HyftConfig) -> jax.Array:
+    return hyft_softmax_fwd(z, cfg)
+
+
+def hyft_softmax_bwd_ref(s: jax.Array, dy: jax.Array, cfg: HyftConfig) -> jax.Array:
+    return hyft_softmax_bwd(s, dy, cfg)
+
+
+def attention_ref(q, k, v, cfg: HyftConfig | None, sm_scale=None, causal=True,
+                  softmax_fn=None):
+    """Unfused attention: QK^T -> (hyft|exact) softmax -> PV, with GQA."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    kr = jnp.repeat(k, Hq // Hkv, axis=1)
+    vr = jnp.repeat(v, Hq // Hkv, axis=1)
+    z = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), kr.astype(F32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        z = jnp.where(mask, z, NEG_BIG)
+    if softmax_fn is not None:
+        p = softmax_fn(z)
+    elif cfg is None:
+        p = jax.nn.softmax(z, axis=-1)
+    else:
+        p = hyft_softmax_fwd(z, cfg).astype(F32)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(F32))
+
+
+def flash_hyft_attention_ref(q, k, v, cfg: HyftConfig, sm_scale=None,
+                             causal=True, block_q=128, block_k=128):
+    """Blocked oracle: replays the fused kernel's online algorithm in jnp."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    q3 = q.reshape(B * Hq, Sq, D).astype(F32)
+    k3 = k.reshape(B * Hkv, Sk, D).astype(F32)
+    v3 = v.reshape(B * Hkv, Sk, D).astype(F32)
+    out = jnp.zeros((B * Hq, Sq, D), F32)
+
+    for b in range(B * Hq):
+        for i in range(nq):
+            qt = q3[b, i * bq:(i + 1) * bq]
+            m_run = jnp.full((bq, 1), -(2 ** (cfg.total_bits - 1)), I32)
+            l_run = jnp.zeros((bq, 1), F32)
+            acc = jnp.zeros((bq, D), F32)
+            for j in range(nk):
+                kt = k3[b // group, j * bk:(j + 1) * bk]
+                vt = v3[b // group, j * bk:(j + 1) * bk]
+                z = (qt @ kt.T) * scale
+                if causal:
+                    qi = i * bq + jnp.arange(bq)[:, None]
+                    ki = j * bk + jnp.arange(bk)[None, :]
+                    z = jnp.where(qi >= ki, z, NEG_BIG)
+                z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+                zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
+                blk_max = jnp.max(zsub, axis=-1, keepdims=True)
+                m_new = jnp.maximum(m_run, blk_max)
+                e, m = nm.exp_unit(z_raw - m_new, cfg.frac_bits, cfg.mant_bits)
+                addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+                l_blk = jnp.sum(addend, axis=-1, keepdims=True)
+                e_a, m_a = nm.exp_unit(m_run - m_new, cfg.frac_bits, cfg.mant_bits)
+                alpha = ((1 << cfg.mant_bits) + m_a).astype(F32) * \
+                    nm.pow2_float(e_a - cfg.mant_bits)
+                l_run = nm.fx_quantize(l_run * alpha, cfg.acc_bits) + l_blk
+                p = ((1 << cfg.mant_bits) + m).astype(F32) * \
+                    nm.pow2_float(e - cfg.mant_bits)
+                acc = acc * alpha + p @ vt
+                m_run = m_new
+            e_b, m_b = nm.lod_refloat(l_run, cfg.mant_bits)
+            sg, e_n, m_n = nm.float_fields(acc, cfg.mant_bits)
+            res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
+            res = jnp.where(sg == 1, -res, res)
+            res = jnp.where(acc == 0.0, 0.0, res)
+            out = out.at[b, i * bq:(i + 1) * bq].set(res)
+    return out.reshape(B, Hq, Sq, D)

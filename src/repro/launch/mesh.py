@@ -1,0 +1,33 @@
+"""Production mesh construction (single-pod 16x16 and 2-pod 2x16x16).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    size = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < size:
+        raise RuntimeError(
+            f"need {size} devices, have {len(devices)}; the dry-run sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    from jax.sharding import Mesh
+    arr = np.asarray(devices[:size]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    import jax
+    size = int(np.prod(shape))
+    from jax.sharding import Mesh
+    arr = np.asarray(jax.devices()[:size]).reshape(shape)
+    return Mesh(arr, axes)

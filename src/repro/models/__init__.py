@@ -1,0 +1,12 @@
+"""Model zoo for the 10 assigned architectures + the paper's BERT proxy.
+
+Lazy re-exports to avoid a circular import with distributed.sharding
+(which needs models.layers at module scope).
+"""
+
+
+def __getattr__(name):
+    if name in ("Model", "build_model"):
+        from repro.models import model_zoo
+        return getattr(model_zoo, name)
+    raise AttributeError(name)

@@ -1,0 +1,304 @@
+"""Attention: GQA/MHA/cross, pluggable softmax, KV cache, three fwd modes.
+
+Modes (``AttnMode``):
+  unfused  — QK^T -> registry softmax (hyft/exact/...) -> PV.  The
+             paper-faithful training path: the softmax VJP is the
+             accelerator's reused DIV/MUL datapath (custom_vjp in core),
+             while the surrounding matmuls stay on the MXU.
+  chunked  — lax.scan over KV chunks with online Hyft (max,sum,acc) carry;
+             the pure-JAX twin of the fused Pallas kernel.  Lowerable in the
+             multi-pod dry-run (Pallas can't lower to the CPU backend) and
+             differentiable via a recompute-based custom VJP (flash-style
+             backward using the saved row stats).  This is the beyond-paper
+             memory-roofline lever for long sequences.
+  kernel   — the Pallas flash kernel (TPU runtime; interpret mode in tests).
+
+Sequence-parallel decode (``sp_decode_attention``) implements the paper's
+L1/L2 Hyft tree *across devices*: each model-axis shard computes local
+(max, fixed-sum, acc) Hyft stats over its KV-cache slice; a pmax/psum pair
+merges them — 2 scalars + one (D,)-vector per row over ICI instead of
+all-gathering the scores.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics as nm
+from repro.core.hyft import HyftConfig
+from repro.core.registry import get_softmax, hyft_config_for
+from repro.models.layers import Param, param
+
+F32 = jnp.float32
+I32 = jnp.int32
+NEG_BIG = -3.0e38
+
+
+def attn_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    dm, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": param(ks[0], (dm, hq, dh), ("embed", "heads", "head_dim"), dtype),
+        "wk": param(ks[1], (dm, hkv, dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": param(ks[2], (dm, hkv, dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": param(ks[3], (hq, dh, dm), ("heads", "head_dim", "embed"), dtype,
+                    scale=(hq * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Param(jnp.zeros((hq, dh), dtype), ("heads", "head_dim"))
+        p["bk"] = Param(jnp.zeros((hkv, dh), dtype), ("kv_heads", "head_dim"))
+        p["bv"] = Param(jnp.zeros((hkv, dh), dtype), ("kv_heads", "head_dim"))
+    return p
+
+
+def qkv_proj(p, x, kv_x, cfg, positions, kv_positions):
+    """x: (B,S,dm) -> q (B,Hq,S,D); kv_x -> k,v (B,Hkv,Sk,D), rope'd."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.rope_theta:
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, kv_positions, cfg.rope_theta)
+    # -> (B, H, S, D)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def _rope(x, positions, theta):
+    from repro.models.layers import apply_rope
+    return apply_rope(x, positions, theta)
+
+
+def out_proj(p, o):
+    """o: (B,H,S,D) -> (B,S,dm)."""
+    return jnp.einsum("bhsd,hde->bse", o, p["wo"].astype(o.dtype))
+
+
+# --------------------------------------------------------------------------
+# mode 1: unfused (paper-faithful)
+# --------------------------------------------------------------------------
+
+
+def unfused_attention(q, k, v, softmax_impl: str, *, causal: bool,
+                      q_offset=0, kv_len_mask=None):
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D); softmax over full score rows."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    z = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(F32), k.astype(F32)) * (D ** -0.5)
+    if causal:
+        qi = q_offset + jax.lax.broadcasted_iota(I32, (Sq, Sk), 0)
+        ki = jax.lax.broadcasted_iota(I32, (Sq, Sk), 1)
+        z = jnp.where(qi >= ki, z, NEG_BIG)
+    if kv_len_mask is not None:  # (B, Sk) bool — decode cache validity
+        z = jnp.where(kv_len_mask[:, None, None, None, :], z, NEG_BIG)
+    p = get_softmax(softmax_impl)(z).astype(F32)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(F32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# mode 2: chunked online-Hyft (pure JAX; scan over KV chunks) + custom VJP
+# --------------------------------------------------------------------------
+
+
+def _hyft_chunk_stats(z, cfg: HyftConfig, m_run):
+    """One KV chunk: Hyft stages 1-2 against running max. Returns
+    (m_new raw, alpha fp32, addend-sum fp32@acc-grid, p fp32)."""
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    zsub = z_raw[..., :: cfg.step] if cfg.step > 1 else z_raw
+    blk_max = jnp.max(zsub, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_run, blk_max)
+    e, m = nm.exp_unit(z_raw - m_new, cfg.frac_bits, cfg.mant_bits)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    l_blk = jnp.sum(addend, axis=-1, keepdims=True)
+    e_a, m_a = nm.exp_unit(m_run - m_new, cfg.frac_bits, cfg.mant_bits)
+    alpha = ((1 << cfg.mant_bits) + m_a).astype(F32) * nm.pow2_float(e_a - cfg.mant_bits)
+    p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
+    return m_new, alpha, l_blk, p
+
+
+def _hyft_finalize(acc, l_run, cfg: HyftConfig):
+    e_b, m_b = nm.lod_refloat(l_run, cfg.mant_bits)
+    sg, e_n, m_n = nm.float_fields(acc, cfg.mant_bits)
+    res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
+    res = jnp.where(sg == 1, -res, res)
+    return jnp.where(acc == 0.0, 0.0, res)
+
+
+def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset):
+    """Returns (o, m_final raw, l_final). Shapes: q (B,Hq,Sq,D), k/v GQA."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    nk = Sk // chunk
+    qg = q.reshape(B, Hkv, g, Sq, D).astype(F32) * (D ** -0.5)
+    kc = k.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
+    vc = v.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        j, kt, vt = xs
+        z = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kt)
+        if causal:
+            qi = q_offset + jax.lax.broadcasted_iota(I32, (Sq, chunk), 0)
+            ki = jax.lax.broadcasted_iota(I32, (Sq, chunk), 1) + j * chunk
+            z = jnp.where((qi >= ki)[None, None, None], z, NEG_BIG)
+        m_new, alpha, l_blk, p = _hyft_chunk_stats(z, cfg, m_run)
+        l_run = nm.fx_quantize(l_run * alpha, cfg.acc_bits) + l_blk
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vt)
+        return (m_new, l_run, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Sq, 1), -(2 ** (cfg.total_bits - 1)), I32)
+    l0 = jnp.zeros((B, Hkv, g, Sq, 1), F32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, D), F32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+    o = _hyft_finalize(acc, l_f, cfg).reshape(B, Hq, Sq, D)
+    return o, m_f, l_f
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def chunked_hyft_attention(q, k, v, cfg: HyftConfig, causal: bool = True,
+                           chunk: int = 512, q_offset: int = 0):
+    """Online-Hyft attention, O(chunk) memory in the KV dimension."""
+    o, _, _ = _chunked_fwd(q, k, v, cfg, causal, chunk, q_offset)
+    return o.astype(q.dtype)
+
+
+def _cha_fwd(q, k, v, cfg, causal, chunk, q_offset):
+    o, m_f, l_f = _chunked_fwd(q, k, v, cfg, causal, chunk, q_offset)
+    return o.astype(q.dtype), (q, k, v, o, m_f, l_f)
+
+
+def _cha_bwd(cfg, causal, chunk, q_offset, res, do):
+    """Flash-style backward: recompute Hyft probs per chunk from the saved
+    row stats (single-pass, no online rescale), then the standard softmax
+    attention gradients.  The softmax-VJP identity is applied to the *Hyft*
+    probabilities — the paper's training mode, matrix-free."""
+    q, k, v, o, m_f, l_f = res
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    nk = Sk // chunk
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, g, Sq, D).astype(F32)
+    dog = do.reshape(B, Hkv, g, Sq, D).astype(F32)
+    og = o.reshape(B, Hkv, g, Sq, D).astype(F32)
+    delta = jnp.sum(dog * og, axis=-1, keepdims=True)  # (B,Hkv,g,Sq,1)
+    e_b, m_b = nm.lod_refloat(l_f, cfg.mant_bits)
+
+    kc = k.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
+    vc = v.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
+
+    def probs(j, kt):
+        z = jnp.einsum("bhgqd,bhkd->bhgqk", qg * scale, kt)
+        if causal:
+            qi = q_offset + jax.lax.broadcasted_iota(I32, (Sq, chunk), 0)
+            ki = jax.lax.broadcasted_iota(I32, (Sq, chunk), 1) + j * chunk
+            z = jnp.where((qi >= ki)[None, None, None], z, NEG_BIG)
+        z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+        e, m = nm.exp_unit(z_raw - m_f, cfg.frac_bits, cfg.mant_bits)
+        return nm.log_div(e, m, e_b, m_b, cfg.mant_bits)  # broadcast over chunk
+
+    def body(dq, xs):
+        j, kt, vt = xs
+        p = probs(j, kt)  # (B,Hkv,g,Sq,chunk)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vt)
+        ds = p * (dp - delta)
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kt) * scale
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg) * scale
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, Hkv, g, Sq, D), F32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nk), kc, vc))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Sk, D)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Sk, D)
+    return (dq.reshape(B, Hq, Sq, D).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+chunked_hyft_attention.defvjp(_cha_fwd, _cha_bwd)
+
+
+# --------------------------------------------------------------------------
+# mode selection + decode
+# --------------------------------------------------------------------------
+
+
+def attention_fwd(q, k, v, cfg, *, causal=True, q_offset=0, kv_len_mask=None):
+    """Dispatch on cfg.attn_mode; falls back to unfused for non-Hyft impls."""
+    hcfg = hyft_config_for(cfg.softmax_impl)
+    mode = getattr(cfg, "attn_mode", "unfused")
+    if mode == "chunked" and hcfg is not None and kv_len_mask is None:
+        chunk = min(getattr(cfg, "attn_chunk", 512), k.shape[2])
+        if k.shape[2] % chunk == 0:
+            return chunked_hyft_attention(q, k, v, hcfg, causal, chunk, q_offset)
+    if mode == "kernel" and hcfg is not None and kv_len_mask is None:
+        from repro.kernels import ops
+        return ops.hyft_attention(q, k, v, hcfg, causal=causal).astype(q.dtype)
+    return unfused_attention(q, k, v, cfg.softmax_impl, causal=causal,
+                             q_offset=q_offset, kv_len_mask=kv_len_mask)
+
+
+# --------------------------------------------------------------------------
+# sequence-parallel decode: the Hyft L1/L2 tree across devices
+# --------------------------------------------------------------------------
+
+
+def sp_decode_attention(q, k_shard, v_shard, valid_mask, cfg: HyftConfig,
+                        axis_name: str):
+    """Per-shard body (call inside shard_map; KV cache sharded on seq axis).
+
+    q: (B,Hq,1,D) replicated over ``axis_name``; k/v_shard: (B,Hkv,Ss,D)
+    local slice; valid_mask: (B,Ss) bool local.  L1 = local Hyft stages 1-2;
+    L2 = pmax of the fixed-point max + psum of rescaled fixed sums / accs —
+    the paper's two-layer Hyft tree with ICI as the second layer.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_shard.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, 1, D).astype(F32) * (D ** -0.5)
+    z = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_shard.astype(F32))
+    z = jnp.where(valid_mask[:, None, None, None, :], z, NEG_BIG)
+    # L1: local fixed-point max + exp/sum
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    m_loc = jnp.max(z_raw, axis=-1, keepdims=True)
+    # L2a: global max (integer pmax over ICI)
+    m_glob = jax.lax.pmax(m_loc, axis_name)
+    e, m = nm.exp_unit(z_raw - m_glob, cfg.frac_bits, cfg.mant_bits)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    l_loc = jnp.sum(addend, axis=-1, keepdims=True)
+    p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
+    acc_loc = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_shard.astype(F32))
+    # L2b: global fixed-point sum + acc reduce
+    l_glob = jax.lax.psum(l_loc, axis_name)
+    acc_glob = jax.lax.psum(acc_loc, axis_name)
+    out = _hyft_finalize(acc_glob, l_glob, cfg)
+    return out.reshape(B, Hq, 1, D)
+
+
+# --------------------------------------------------------------------------
+# KV cache
+# --------------------------------------------------------------------------
+
+
+def cache_init(cfg, batch, max_len, dtype) -> dict[str, Any]:
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_update(cache, k_new, v_new, pos):
+    """k_new/v_new: (B,Hkv,S_new,D); pos: scalar write offset."""
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, pos, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, pos, 0))
+    return {"k": k, "v": v}

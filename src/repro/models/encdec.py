@@ -1,0 +1,196 @@
+"""Encoder-decoder stack (Whisper-style): stub conv frontend + enc + dec.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, T_frames, frontend_dim); a single
+projection stands in for the conv stack.  Encoder blocks are non-causal
+self-attention; decoder blocks are causal self-attention + cross-attention
+into the encoder memory.  Both softmaxes run through the registry (Hyft).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.layers import embed_init, embed_lookup, make_norm, param, unembed
+from repro.models.transformer import _remat, _stack, logits_fn
+
+F32 = jnp.float32
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    n1, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    n2, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    return {"norms": {"pre_attn": n1, "pre_mlp": n2},
+            "attn": attn.attn_init(ks[1], cfg, cfg.pdtype),
+            "mlp": mlp_mod.mlp_init(ks[2], cfg, cfg.pdtype)}
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    n1, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    n2, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    n3, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    return {"norms": {"pre_attn": n1, "pre_cross": n2, "pre_mlp": n3},
+            "attn": attn.attn_init(ks[1], cfg, cfg.pdtype),
+            "cross": attn.attn_init(ks[2], cfg, cfg.pdtype),
+            "mlp": mlp_mod.mlp_init(ks[3], cfg, cfg.pdtype)}
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 6)
+    ek = jax.random.split(ks[0], cfg.enc_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    fnorm_e, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    fnorm_d, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    return {
+        "frontend_proj": {"w": param(ks[2], (cfg.frontend_dim, cfg.d_model),
+                                     (None, "embed"), cfg.pdtype)},
+        "enc_blocks": _stack([_enc_block_init(k, cfg) for k in ek]),
+        "enc_norm": fnorm_e,
+        "embed": embed_init(ks[3], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "dec_blocks": _stack([_dec_block_init(k, cfg) for k in dk]),
+        "final_norm": fnorm_d,
+    }
+
+
+def encode(params, frames, cfg, remat="full"):
+    """frames: (B, T, frontend_dim) -> memory (B, T, dm)."""
+    x = jnp.einsum("btf,fd->btd", frames.astype(cfg.cdtype),
+                   params["frontend_proj"]["w"].astype(cfg.cdtype))
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+
+    def block(x_c, lp):
+        h = norm_fn(lp["norms"]["pre_attn"], x_c)
+        q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
+        o = attn.attention_fwd(q, k, v, cfg, causal=False)
+        x_c = x_c + attn.out_proj(lp["attn"], o.astype(x_c.dtype))
+        h = norm_fn(lp["norms"]["pre_mlp"], x_c)
+        return x_c + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(x_c.dtype)
+
+    def body(carry, lp):
+        return _remat(block, remat)(carry, lp), None
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return norm_fn(params["enc_norm"], x)
+
+
+def decode_train(params, tokens, memory, cfg, remat="full"):
+    """Teacher-forced decoder pass. tokens (B,S), memory (B,T,dm)."""
+    x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
+    B, S, _ = x.shape
+    Tm = memory.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mem_pos = jnp.broadcast_to(jnp.arange(Tm, dtype=jnp.int32), (B, Tm))
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+
+    def block(x_c, lp):
+        h = norm_fn(lp["norms"]["pre_attn"], x_c)
+        q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
+        o = attn.attention_fwd(q, k, v, cfg, causal=True)
+        x_c = x_c + attn.out_proj(lp["attn"], o.astype(x_c.dtype))
+        h = norm_fn(lp["norms"]["pre_cross"], x_c)
+        q, k, v = attn.qkv_proj(lp["cross"], h, memory.astype(h.dtype), cfg,
+                                positions, mem_pos)
+        o = attn.unfused_attention(q, k, v, cfg.softmax_impl, causal=False)
+        x_c = x_c + attn.out_proj(lp["cross"], o.astype(x_c.dtype))
+        h = norm_fn(lp["norms"]["pre_mlp"], x_c)
+        return x_c + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(x_c.dtype)
+
+    def body(carry, lp):
+        return _remat(block, remat)(carry, lp), None
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return norm_fn(params["final_norm"], x)
+
+
+def loss(params, batch, cfg, *, remat="full", z_loss=1e-4, **_):
+    memory = encode(params, batch["frames"], cfg, remat=remat)
+    hidden = decode_train(params, batch["tokens"], memory, cfg, remat=remat)
+    logits = logits_fn(params, hidden, cfg.with_(tie_embeddings=True))
+    targets = batch["targets"]
+    mask = batch.get("mask", jnp.ones_like(targets, F32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / denom + z_loss * jnp.sum((lse * mask) ** 2) / denom, \
+        {"nll": jnp.sum(nll) / denom, "aux": jnp.zeros((), F32)}
+
+
+def prefill_parallel(params, cache, batch, cfg):
+    """One-pass prefill: encode once, then a teacher-forced decoder pass that
+    writes the whole prompt's self-attention K/V into the cache (exactly the
+    dense-LM prefill pattern) — vs. the baseline token-by-token scan."""
+    memory = encode(params, batch["frames"], cfg, remat="none")
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
+    Tm = memory.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mem_pos = jnp.broadcast_to(jnp.arange(Tm, dtype=jnp.int32), (B, Tm))
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    mem_c = memory.astype(cfg.cdtype)
+
+    def body(carry, xs_):
+        lp, lc = xs_
+        h = norm_fn(lp["norms"]["pre_attn"], carry)
+        q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
+        nc = attn.cache_update(lc, k, v, 0)
+        o = attn.attention_fwd(q, k, v, cfg, causal=True)
+        y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
+        h = norm_fn(lp["norms"]["pre_cross"], y)
+        q, k, v = attn.qkv_proj(lp["cross"], h, mem_c, cfg, positions, mem_pos)
+        o = attn.unfused_attention(q, k, v, cfg.softmax_impl, causal=False)
+        y = y + attn.out_proj(lp["cross"], o.astype(y.dtype))
+        h = norm_fn(lp["norms"]["pre_mlp"], y)
+        return y + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(y.dtype), nc
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], cache["self"]))
+    x = norm_fn(params["final_norm"], x)
+    logits = logits_fn(params, x[:, -1:], cfg.with_(tie_embeddings=True))
+    new_cache = {"self": new_self,
+                 "memory": memory.astype(cache["memory"].dtype)}
+    return logits, new_cache, S
+
+
+def init_cache(params, cfg, batch, max_len, dtype):
+    c = attn.cache_init(cfg, batch, max_len, dtype)
+    return {"self": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c),
+        "memory": jnp.zeros((batch, cfg.frontend_len, cfg.d_model), dtype)}
+
+
+def decode_step(params, cache, tokens1, pos, cfg):
+    """One decoder token against a cached encoder memory + self KV cache."""
+    B = tokens1.shape[0]
+    x = embed_lookup(params["embed"], tokens1).astype(cfg.cdtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    memory = cache["memory"].astype(cfg.cdtype)
+    Tm = memory.shape[1]
+    mem_pos = jnp.broadcast_to(jnp.arange(Tm, dtype=jnp.int32), (B, Tm))
+    max_len = cache["self"]["k"].shape[3]
+    kv_mask = (jnp.arange(max_len) <= pos)[None, :].repeat(B, 0)
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+
+    def body(carry, xs_):
+        lp, lc = xs_
+        h = norm_fn(lp["norms"]["pre_attn"], carry)
+        q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
+        nc = attn.cache_update(lc, k, v, pos)
+        o = attn.unfused_attention(q, nc["k"], nc["v"], cfg.softmax_impl,
+                                   causal=False, kv_len_mask=kv_mask)
+        y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
+        h = norm_fn(lp["norms"]["pre_cross"], y)
+        q, k, v = attn.qkv_proj(lp["cross"], h, memory, cfg, positions, mem_pos)
+        o = attn.unfused_attention(q, k, v, cfg.softmax_impl, causal=False)
+        y = y + attn.out_proj(lp["cross"], o.astype(y.dtype))
+        h = norm_fn(lp["norms"]["pre_mlp"], y)
+        return y + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(y.dtype), nc
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], cache["self"]))
+    x = norm_fn(params["final_norm"], x)
+    logits = logits_fn(params, x, cfg.with_(tie_embeddings=True))
+    return logits, {"self": new_self, "memory": cache["memory"]}

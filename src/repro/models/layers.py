@@ -1,0 +1,184 @@
+"""Model building blocks: boxed params, norms, rotary, activations, dense.
+
+Parameters are ``Param`` pytree nodes carrying *logical* sharding axes as
+static aux data; ``unbox`` strips them for compute, and
+``repro.distributed.sharding`` maps logical axes -> mesh ``PartitionSpec``
+via per-arch rules.  This is the flax ``nn.Partitioned`` pattern without the
+flax dependency (only jax/numpy are available offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter with logical axis names (static metadata)."""
+
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], tuple(aux))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree):
+    """Strip Param boxes -> plain array pytree (what compute functions take)."""
+    return jax.tree.map(lambda p: p.value if is_param(p) else p, tree,
+                        is_leaf=is_param)
+
+
+def boxed_axes(tree):
+    """Param boxes -> logical-axes pytree (same structure as unbox(tree))."""
+    return jax.tree.map(lambda p: p.axes if is_param(p) else None, tree,
+                        is_leaf=is_param)
+
+
+def param(key, shape, axes, dtype=F32, scale: float | None = None,
+          init: str = "normal") -> Param:
+    """Initialize one parameter. ``scale=None`` -> fan-in 1/sqrt(shape[0])."""
+    if init == "zeros":
+        return Param(jnp.zeros(shape, dtype), axes)
+    if init == "ones":
+        return Param(jnp.ones(shape, dtype), axes)
+    s = scale if scale is not None else (shape[0] ** -0.5 if shape else 1.0)
+    return Param((jax.random.normal(key, shape, F32) * s).astype(dtype), axes)
+
+
+# --------------------------------------------------------------------------
+# norms — always computed in fp32 (standard mixed-precision practice)
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(dm, dtype):
+    return {"scale": Param(jnp.ones((dm,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def layernorm_init(dm, dtype, bias=True):
+    p = {"scale": Param(jnp.ones((dm,), dtype), ("embed",))}
+    if bias:
+        p["bias"] = Param(jnp.zeros((dm,), dtype), ("embed",))
+    return p
+
+
+def layernorm(p, x, eps=1e-5):
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(F32)
+    if "bias" in p:
+        y = y + p["bias"].astype(F32)
+    return y.astype(x.dtype)
+
+
+def np_layernorm(x, eps=1e-5):
+    """Non-parametric LayerNorm (OLMo): no scale, no bias."""
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(kind: str, dm: int, dtype):
+    """Returns (init_params, apply_fn)."""
+    if kind == "rms":
+        return rmsnorm_init(dm, dtype), rmsnorm
+    if kind == "ln":
+        return layernorm_init(dm, dtype), layernorm
+    if kind == "np_ln":
+        return {}, lambda p, x: np_layernorm(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(F32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1.astype(F32) * cos - x2.astype(F32) * sin
+    y2 = x2.astype(F32) * cos + x1.astype(F32) * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+}
+
+
+# --------------------------------------------------------------------------
+# dense / embedding
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, axes, dtype, bias=False):
+    p = {"w": param(key, (d_in, d_out), axes, dtype)}
+    if bias:
+        p["b"] = Param(jnp.zeros((d_out,), dtype), (axes[-1],))
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key, vocab, dm, dtype):
+    return {"table": param(key, (vocab, dm), ("vocab", "embed"), dtype, scale=1.0)}
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Project to vocab logits (tied or untied table of shape (V, dm))."""
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))

@@ -1,0 +1,29 @@
+"""MLP blocks: gated (SwiGLU-family) and plain (squared-ReLU / GeLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTIVATIONS, param
+
+
+def mlp_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    dm, dff = cfg.d_model, cfg.d_ff
+    p = {"w_up": param(ks[0], (dm, dff), ("embed", "mlp"), dtype),
+         "w_down": param(ks[1], (dff, dm), ("mlp", "embed"), dtype,
+                         scale=dff ** -0.5)}
+    if cfg.mlp_gated:
+        p["w_gate"] = param(ks[2], (dm, dff), ("embed", "mlp"), dtype)
+    return p
+
+
+def mlp_apply(p, x, cfg):
+    act = ACTIVATIONS[cfg.act]
+    up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))

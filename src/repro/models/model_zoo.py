@@ -1,0 +1,68 @@
+"""Model zoo: one uniform interface over every architecture family.
+
+``build_model(cfg)`` returns a ``Model`` namespace with:
+  init(key)                        -> boxed param pytree (Param leaves)
+  loss(params, batch, **opts)      -> (scalar, metrics)   [train step body]
+  prefill(params, cache, batch)    -> (logits, cache, len)
+  decode_step(params, cache, tok, pos) -> (logits, cache)
+  init_cache(params, batch, max_len, dtype)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init(key, cfg),
+            loss=lambda p, b, **kw: encdec.loss(p, b, cfg, **kw),
+            prefill=_encdec_prefill(cfg),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda p, batch, max_len, dtype: encdec.init_cache(
+                p, cfg, batch, max_len, dtype),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init(key, cfg),
+        loss=lambda p, b, **kw: transformer.lm_loss(p, b, cfg, **kw),
+        prefill=lambda p, c, b: transformer.prefill(p, c, b["tokens"], cfg),
+        decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
+        init_cache=lambda p, batch, max_len, dtype: transformer.init_cache(
+            p, cfg, batch, max_len, dtype),
+    )
+
+
+def _encdec_prefill(cfg):
+    def fn(params, cache, batch):
+        if cfg.parallel_prefill:
+            return encdec.prefill_parallel(params, cache, batch, cfg)
+        memory = encdec.encode(params, batch["frames"], cfg, remat="none")
+        cache = dict(cache, memory=memory.astype(cache["memory"].dtype))
+        # baseline: run prompt tokens through decode steps one at a time
+        tokens = batch["tokens"]
+
+        def step(carry, t):
+            c, pos = carry
+            logits, nc = encdec.decode_step(params, c, t[:, None], pos, cfg)
+            return (nc, pos + 1), logits
+        (cache, n), logits = jax.lax.scan(step, (cache, 0), tokens.T)
+        return logits[-1], cache, tokens.shape[1]
+    return fn

@@ -1,0 +1,161 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+The chunked SSD algorithm is the MXU-friendly form: intra-chunk attention-
+like quadratic term + inter-chunk state recurrence (lax.scan over chunks).
+Softmax-free — the Hyft technique is *inapplicable* here by design (DESIGN.md
+§5); the block still exercises sharding, remat, and long-context decode.
+
+Decode is O(1) per token: a single state update carried in the cache, which
+is what makes the ``long_500k`` cell runnable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param, param
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    dm, N, K = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    proj_out = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": param(ks[0], (dm, proj_out), ("embed", "mlp"), dtype),
+        "conv_w": param(ks[1], (K, conv_dim), (None, "mlp"), dtype,
+                        scale=K ** -0.5),
+        "conv_b": Param(jnp.zeros((conv_dim,), dtype), ("mlp",)),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(F32), ("heads",)),
+        "D": Param(jnp.ones((H,), F32), ("heads",)),
+        "dt_bias": Param(jnp.zeros((H,), F32), ("heads",)),
+        "norm_scale": Param(jnp.ones((d_inner,), dtype), ("mlp",)),
+        "out_proj": param(ks[2], (d_inner, dm), ("mlp", "embed"), dtype,
+                          scale=d_inner ** -0.5),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, H, _ = ssm_dims(cfg)
+    N = cfg.ssm_state
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    y32 = (y * jax.nn.silu(z.astype(F32))).astype(F32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * p["norm_scale"].astype(F32))
+
+
+def ssm_train(p, x, cfg, return_state=False):
+    """x: (B,S,dm) -> (B,S,dm); causal depthwise conv + chunked SSD.
+
+    ``return_state=True`` also returns the decode cache after the prompt:
+    the final SSD state (B,H,P,N) and the last K-1 pre-conv columns — this
+    is what makes *parallel prefill* possible for SSM archs (vs. the naive
+    token-by-token scan)."""
+    Bsz, S, _ = x.shape
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    N, P, Q = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_chunk
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    K = cfg.ssm_conv
+    conv_tail = xbc[:, S - (K - 1):, :] if K > 1 else xbc[:, :0, :]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+               for i in range(K)) + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv.astype(F32))
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"])                                   # (H,) < 0
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])        # (B,S,H)
+    nC = S // Q
+    xh = xs.reshape(Bsz, nC, Q, H, P)
+    dtc = dt.reshape(Bsz, nC, Q, H)
+    Bc = Bm.reshape(Bsz, nC, Q, N)
+    Cc = Cm.reshape(Bsz, nC, Q, N)
+    dA = dtc * A                                               # (B,c,Q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)
+    xdt = xh * dtc[..., None]
+
+    # intra-chunk (quadratic, MXU): M[i,j] = (C_i . B_j) exp(cum_i - cum_j), i>=j
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    ldecay = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,c,Q,K,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask in log space *before* exp: exp of masked +large would give inf and
+    # poison the gradient through the where (inf * 0 -> NaN)
+    ldecay = jnp.where(mask[None, None, :, :, None], ldecay, -jnp.inf)
+    M = G[..., None] * jnp.exp(ldecay)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xdt)
+
+    # chunk boundary states + inter-chunk scan
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,c,Q,H)
+    chunk_state = jnp.einsum("bckn,bckh,bckhp->bchpn", Bc, decay_end, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,c,H)
+
+    def body(h_prev, xs_):
+        cs, cd = xs_
+        h_new = cd[:, :, None, None] * h_prev + cs
+        return h_new, h_prev
+
+    h0 = jnp.zeros((Bsz, H, P, N), F32)
+    h_final, h_prevs = jax.lax.scan(
+        body, h0, (chunk_state.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # (B,c,H,P,N)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter + xh.astype(F32) * p["D"][None, None, None, :, None])
+    y = y.reshape(Bsz, S, d_inner)
+    out = _gated_norm(p, y, z)
+    out = jnp.einsum("bsp,pd->bsd", out.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    if return_state:
+        return out, {"ssm": h_final, "conv": conv_tail}
+    return out
+
+
+def ssm_cache_init(cfg, batch, dtype):
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    return {"ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), F32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)}
+
+
+def ssm_decode(p, x1, cache, cfg):
+    """Single-token step. x1: (B,1,dm) -> (B,1,dm), updated cache."""
+    Bsz = x1.shape[0]
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dp->bsp", x1, p["in_proj"].astype(x1.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]         # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,conv)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(F32),
+                      p["conv_w"].astype(F32)) + p["conv_b"].astype(F32)
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+    A = -jnp.exp(p["A_log"])
+    dtv = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"])  # (B,H)
+    xh = xs.reshape(Bsz, H, P)
+    dA = jnp.exp(dtv * A)                                       # (B,H)
+    h = cache["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh, Bm)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner)
+    out = _gated_norm(p, y, z)
+    out = jnp.einsum("bsp,pd->bsd", out.astype(x1.dtype),
+                     p["out_proj"].astype(x1.dtype))
+    return out, {"ssm": h, "conv": window[:, 1:]}

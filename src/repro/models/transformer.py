@@ -1,0 +1,433 @@
+"""Decoder-only LM stack: dense / MoE / SSM / hybrid, scan-over-layers.
+
+One parameter pytree per *layer kind*, stacked on a leading ``layers`` axis
+and consumed by ``lax.scan`` — the HLO stays compact at any depth (96-layer
+nemotron lowers as fast as 2 layers), which is what makes the 40-cell
+multi-pod dry-run tractable.  Hybrid (zamba2) scans Mamba2 blocks and applies
+the *shared* attention block (single param set, closure-captured) via
+``lax.cond`` on a per-layer flag.
+
+Remat: each scanned block body is wrapped in ``jax.checkpoint`` with a
+configurable policy ("full" saves only the residual stream).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_acts
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import embed_init, embed_lookup, make_norm, param, unembed
+
+F32 = jnp.float32
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _norm_pair(key, cfg):
+    p1, f = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    p2, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    return {"pre_attn": p1, "pre_mlp": p2}, f
+
+
+def _block_init(key, cfg):
+    """One transformer block (attention + mlp/moe)."""
+    ks = jax.random.split(key, 3)
+    norms, _ = _norm_pair(ks[0], cfg)
+    p = {"norms": norms, "attn": attn.attn_init(ks[1], cfg, cfg.pdtype)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, cfg.pdtype)
+    else:
+        p["mlp"] = mlp_mod.mlp_init(ks[2], cfg, cfg.pdtype)
+    return p
+
+
+def _block_apply(p, x, cfg, positions, *, causal=True, decode_cache=None,
+                 pos_offset=0, kv_len_mask=None):
+    """Returns (x, aux, new_cache)."""
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    h = norm_fn(p["norms"]["pre_attn"], x)
+    q, k, v = attn.qkv_proj(p["attn"], h, h, cfg, positions, positions)
+    if decode_cache is not None:
+        cache = attn.cache_update(decode_cache, k, v, pos_offset)
+        o = attn.unfused_attention(
+            q, cache["k"], cache["v"], cfg.softmax_impl, causal=False,
+            kv_len_mask=kv_len_mask)
+    else:
+        cache = None
+        o = attn.attention_fwd(q, k, v, cfg, causal=causal)
+    x = x + attn.out_proj(p["attn"], o.astype(x.dtype))
+    h = norm_fn(p["norms"]["pre_mlp"], x)
+    aux = jnp.zeros((), F32)
+    if "moe" in p:
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+    else:
+        y = mlp_mod.mlp_apply(p["mlp"], h, cfg)
+    return x + y.astype(x.dtype), aux, cache
+
+
+def _mamba_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    norm_p, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    return {"norm": norm_p, "ssm": ssm_mod.ssm_init(ks[1], cfg, cfg.pdtype)}
+
+
+def _mamba_block_apply(p, x, cfg, *, decode_cache=None):
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    h = norm_fn(p["norm"], x)
+    if decode_cache is not None:
+        y, cache = ssm_mod.ssm_decode(p["ssm"], h, decode_cache, cfg)
+        return x + y, cache
+    return x + ssm_mod.ssm_train(p["ssm"], h, cfg), None
+
+
+# --------------------------------------------------------------------------
+# model init
+# --------------------------------------------------------------------------
+
+
+def init(key, cfg) -> dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model,
+                                             cfg.pdtype)}
+    fnorm, _ = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    p["final_norm"] = fnorm
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.pdtype)
+    if cfg.family in ("dense", "moe", "vlm"):
+        lk = jax.random.split(ks[2], cfg.n_layers)
+        p["blocks"] = _stack([_block_init(k, cfg) for k in lk])
+    elif cfg.family == "ssm":
+        lk = jax.random.split(ks[2], cfg.n_layers)
+        p["blocks"] = _stack([_mamba_block_init(k, cfg) for k in lk])
+    elif cfg.family == "hybrid":
+        lk = jax.random.split(ks[2], cfg.n_layers)
+        p["blocks"] = _stack([_mamba_block_init(k, cfg) for k in lk])
+        p["shared_attn"] = _block_init(ks[3], cfg)  # single shared block
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        p["frontend_proj"] = {
+            "w": param(ks[4], (cfg.frontend_dim, cfg.d_model),
+                       (None, "embed"), cfg.pdtype)}
+    return p
+
+
+def _hybrid_attn_flags(cfg) -> jnp.ndarray:
+    """True after every ``attn_every``-th ssm block (zamba2 pattern)."""
+    idx = jnp.arange(cfg.n_layers)
+    return (idx % cfg.attn_every) == (cfg.attn_every - 1)
+
+
+def hybrid_n_invocations(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def _hybrid_inv_idx(cfg) -> jnp.ndarray:
+    """Invocation index per layer (valid where the flag is True).
+
+    The shared block shares *weights* across invocations, but every
+    invocation has its own KV cache (distinct activations at each depth) —
+    caches are stacked on a leading invocation axis and dynamic-sliced."""
+    flags = _hybrid_attn_flags(cfg)
+    return jnp.cumsum(flags.astype(jnp.int32)) - 1
+
+
+# --------------------------------------------------------------------------
+# training / prefill forward
+# --------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "full"
+
+
+def forward(params, tokens, cfg, *, embeds_prefix=None, remat="full",
+            causal=True):
+    """tokens: (B,S) -> hidden states (B,S,dm) and scalar moe aux."""
+    x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
+    if embeds_prefix is not None:  # VLM: prepend projected patch embeddings
+        pe = jnp.einsum("bpf,fd->bpd", embeds_prefix.astype(cfg.cdtype),
+                        params["frontend_proj"]["w"].astype(cfg.cdtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            y, aux = _remat(
+                lambda q, w: _block_apply(w, q, cfg, positions, causal=causal)[:2],
+                remat)(carry, lp)
+            return constrain_acts(y), aux
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        aux = jnp.sum(auxs)
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            y, _ = _remat(
+                lambda q, w: _mamba_block_apply(w, q, cfg), remat)(carry, lp)
+            return constrain_acts(y), jnp.zeros((), F32)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        aux = jnp.zeros((), F32)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        flags = _hybrid_attn_flags(cfg)
+
+        def body(carry, xs_):
+            lp, flag = xs_
+            y, _ = _remat(lambda q, w: _mamba_block_apply(w, q, cfg), remat)(carry, lp)
+            y = jax.lax.cond(
+                flag,
+                lambda q: _remat(lambda r, w: _block_apply(
+                    w, r, cfg, positions, causal=causal)[0], remat)(q, shared),
+                lambda q: q, y)
+            return constrain_acts(y), jnp.zeros((), F32)
+        x, _ = jax.lax.scan(body, x, (params["blocks"], flags))
+        aux = jnp.zeros((), F32)
+    else:
+        raise ValueError(cfg.family)
+
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    x = norm_fn(params["final_norm"], x)
+    return x, aux
+
+
+def logits_fn(params, hidden, cfg):
+    table = params["embed" if cfg.tie_embeddings else "unembed"]
+    return unembed(table, hidden.astype(cfg.cdtype)).astype(F32)
+
+
+def lm_loss(params, batch, cfg, *, remat="full", z_loss=1e-4,
+            moe_aux_weight=0.01):
+    """Teacher-forced LM loss. batch: tokens/targets/(mask)/(embeds)."""
+    hidden, aux = forward(params, batch["tokens"], cfg,
+                          embeds_prefix=batch.get("embeds"), remat=remat)
+    if batch.get("embeds") is not None:
+        hidden = hidden[:, batch["embeds"].shape[1]:]  # loss on text positions
+    logits = logits_fn(params, hidden, cfg)
+    targets = batch["targets"]
+    mask = batch.get("mask", jnp.ones_like(targets, F32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    zl = z_loss * jnp.sum((lse * mask) ** 2)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom + zl / denom + moe_aux_weight * aux
+    return loss, {"nll": jnp.sum(nll) / denom, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(params, cfg, batch, max_len, dtype):
+    if cfg.family in ("dense", "moe", "vlm"):
+        c = attn.cache_init(cfg, batch, max_len, dtype)
+        return {"blocks": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)}
+    if cfg.family == "ssm":
+        c = ssm_mod.ssm_cache_init(cfg, batch, dtype)
+        return {"blocks": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)}
+    if cfg.family == "hybrid":
+        c = ssm_mod.ssm_cache_init(cfg, batch, dtype)
+        blocks = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)
+        ninv = hybrid_n_invocations(cfg)
+        sc = attn.cache_init(cfg, batch, max_len, dtype)
+        shared = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (ninv,) + x.shape).copy(), sc)
+        return {"blocks": blocks, "shared_attn": shared}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cache, tokens1, pos, cfg):
+    """One decode step. tokens1: (B,1); pos: scalar int (current length).
+
+    Returns (logits (B,1,V), new cache).  Attention layers append to their
+    KV cache at ``pos`` and attend over [0, pos]; SSM layers update state.
+    """
+    B = tokens1.shape[0]
+    x = embed_lookup(params["embed"], tokens1).astype(cfg.cdtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        max_len = cache["blocks"]["k"].shape[3]
+        kv_mask = (jnp.arange(max_len) <= pos)[None, :].repeat(B, 0)
+
+        def body(carry, xs_):
+            lp, lc = xs_
+            y, _, nc = _block_apply(lp, carry, cfg, positions, causal=False,
+                                    decode_cache=lc, pos_offset=pos,
+                                    kv_len_mask=kv_mask)
+            return y, nc
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        cache = {"blocks": new_cache}
+    elif cfg.family == "ssm":
+        def body(carry, xs_):
+            lp, lc = xs_
+            y, nc = _mamba_block_apply(lp, carry, cfg, decode_cache=lc)
+            return y, nc
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        cache = {"blocks": new_cache}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        sc = cache["shared_attn"]  # stacked (ninv, B, Hkv, S, D)
+        max_len = sc["k"].shape[3]
+        kv_mask = (jnp.arange(max_len) <= pos)[None, :].repeat(B, 0)
+        flags = _hybrid_attn_flags(cfg)
+        inv_idx = _hybrid_inv_idx(cfg)
+
+        def body(carry, xs_):
+            lp, lc, flag, inv = xs_
+            x_c, shared_cache = carry
+            y, nc = _mamba_block_apply(lp, x_c, cfg, decode_cache=lc)
+
+            def with_attn(args):
+                q, scache = args
+                inv_c = jnp.maximum(inv, 0)
+                my = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, inv_c, 0,
+                                                           keepdims=False),
+                    scache)
+                o, _, nsc = _block_apply(shared, q, cfg, positions,
+                                         causal=False, decode_cache=my,
+                                         pos_offset=pos, kv_len_mask=kv_mask)
+                scache = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), inv_c, 0), scache, nsc)
+                return o, scache
+            y, shared_cache = jax.lax.cond(
+                flag, with_attn, lambda a: a, (y, shared_cache))
+            return (y, shared_cache), nc
+        (x, sc), new_blocks = jax.lax.scan(
+            body, (x, sc), (params["blocks"], cache["blocks"], flags, inv_idx))
+        cache = {"blocks": new_blocks, "shared_attn": sc}
+    else:
+        raise ValueError(cfg.family)
+
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+    x = norm_fn(params["final_norm"], x)
+    return logits_fn(params, x, cfg), cache
+
+
+def prefill(params, cache, tokens, cfg):
+    """Fill the cache with a prompt; returns (last logits, cache, length).
+
+    Attention-family models recompute K/V for the prompt in one pass and
+    write them into the cache; SSM/hybrid run token-by-token state updates
+    via ``decode_step`` semantics in a scan (cheap: O(S) with O(1) state).
+    """
+    B, S = tokens.shape
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+
+        def body(carry, xs_):
+            lp, lc = xs_
+            h = norm_fn(lp["norms"]["pre_attn"], carry)
+            q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
+            nc = attn.cache_update(lc, k, v, 0)
+            o = attn.attention_fwd(q, k, v, cfg, causal=True)
+            y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
+            h2 = norm_fn(lp["norms"]["pre_mlp"], y)
+            if "moe" in lp:
+                z, _ = moe_mod.moe_apply(lp["moe"], h2, cfg)
+            else:
+                z = mlp_mod.mlp_apply(lp["mlp"], h2, cfg)
+            return y + z.astype(y.dtype), nc
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        cache = {"blocks": new_cache}
+        x = norm_fn(params["final_norm"], x)
+        return logits_fn(params, x[:, -1:], cfg), cache, S
+
+    if (cfg.parallel_prefill and cfg.family in ("ssm", "hybrid")
+            and S % cfg.ssm_chunk == 0):  # padded tails would poison the state
+        return _prefill_ssm_parallel(params, cache, tokens, cfg)
+
+    # ssm / hybrid: naive sequential state build-up (baseline; see
+    # parallel_prefill for the one-pass chunked-SSD fill — §Perf lever)
+    def step(carry, t):
+        cache_c, pos = carry
+        logits, nc = decode_step(params, cache_c, t[:, None], pos, cfg)
+        return (nc, pos + 1), logits
+    (cache, _), logits = jax.lax.scan(step, (cache, 0), tokens.T)
+    return logits[-1], cache, S
+
+
+def _prefill_ssm_parallel(params, cache, tokens, cfg):
+    """One-pass prefill for SSM/hybrid: the chunked SSD forward computes the
+    post-prompt state directly (``ssm_train(..., return_state=True)``);
+    hybrid shared-attention K/V for the whole prompt land in the cache in one
+    teacher-forced pass, exactly like the dense prefill."""
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h = norm_fn(lp["norm"], carry)
+            y, st = ssm_mod.ssm_train(lp["ssm"], h, cfg, return_state=True)
+            return carry + y, st
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        new_cache = {"blocks": jax.tree.map(
+            lambda a, b: a.astype(b.dtype), states, cache["blocks"])}
+    else:  # hybrid
+        shared = params["shared_attn"]
+        flags = _hybrid_attn_flags(cfg)
+        inv_idx = _hybrid_inv_idx(cfg)
+        sc = cache["shared_attn"]  # stacked (ninv, ...)
+
+        def body(carry, xs_):
+            lp, flag, inv = xs_
+            x_c, scache = carry
+            h = norm_fn(lp["norm"], x_c)
+            y, st = ssm_mod.ssm_train(lp["ssm"], h, cfg, return_state=True)
+            y = x_c + y
+
+            def with_attn(args):
+                q_in, scc = args
+                inv_c = jnp.maximum(inv, 0)
+                h2 = norm_fn(shared["norms"]["pre_attn"], q_in)
+                q, k, v = attn.qkv_proj(shared["attn"], h2, h2, cfg,
+                                        positions, positions)
+                my = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, inv_c, 0,
+                                                           keepdims=False),
+                    scc)
+                ncc = attn.cache_update(my, k, v, 0)
+                scc = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), inv_c, 0), scc, ncc)
+                o = attn.attention_fwd(q, k, v, cfg, causal=True)
+                z2 = q_in + attn.out_proj(shared["attn"], o.astype(q_in.dtype))
+                h3 = norm_fn(shared["norms"]["pre_mlp"], z2)
+                return z2 + mlp_mod.mlp_apply(shared["mlp"], h3, cfg).astype(
+                    z2.dtype), scc
+
+            y, scache = jax.lax.cond(flag, with_attn, lambda a: a, (y, scache))
+            return (y, scache), st
+
+        (x, sc), states = jax.lax.scan(
+            body, (x, sc), (params["blocks"], flags, inv_idx))
+        new_cache = {"blocks": jax.tree.map(
+            lambda a, b: a.astype(b.dtype), states, cache["blocks"]),
+            "shared_attn": sc}
+
+    x = norm_fn(params["final_norm"], x[:, :S])
+    return logits_fn(params, x[:, -1:], cfg), new_cache, S

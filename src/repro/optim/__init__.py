@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    update,
+)
+from repro.optim.schedules import SCHEDULES, warmup_cosine  # noqa: F401

@@ -1,0 +1,132 @@
+"""Optimizers: AdamW (fp32 master weights), SGD-momentum, Adafactor.
+
+Mixed precision: model params may be bf16; the optimizer keeps fp32 master
+copies and re-casts after the update (standard large-model practice).
+Adafactor factors the second moment of >=2-D params (row+col statistics) —
+the memory-roofline lever for the 340B/314B archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    master_dtype: str = "float32"
+
+
+def init(cfg: OptConfig, params) -> dict[str, Any]:
+    def master(p):
+        # force a distinct buffer even when dtypes match: params and master
+        # are donated separately by the train step (aliasing would trip
+        # XLA's double-donation check)
+        return jnp.array(p, dtype=cfg.master_dtype, copy=True)
+
+    if cfg.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32),
+                "master": jax.tree.map(master, params),
+                "mom": jax.tree.map(lambda p: jnp.zeros_like(p, F32), params)}
+    if cfg.name == "adafactor":
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], F32) if p.ndim >= 2
+                    else jnp.zeros_like(p, F32))
+
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)
+                    if p.ndim >= 2 else jnp.zeros((0,), F32))
+        return {"step": jnp.zeros((), jnp.int32),
+                "master": jax.tree.map(master, params),
+                "vr": jax.tree.map(vrow, params),
+                "vc": jax.tree.map(vcol, params)}
+    # adamw
+    return {"step": jnp.zeros((), jnp.int32),
+            "master": jax.tree.map(master, params),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, F32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, F32), params)}
+
+
+def update(cfg: OptConfig, grads, opt_state, params, lr_scale=1.0):
+    """Returns (new_params, new_opt_state)."""
+    step = opt_state["step"] + 1
+    lr = cfg.lr * lr_scale
+
+    if cfg.name == "sgd":
+        def upd(g, mom, mst):
+            g = g.astype(F32)
+            mom = cfg.momentum * mom + g
+            mst = mst - lr * (mom + cfg.weight_decay * mst.astype(F32)).astype(mst.dtype)
+            return mst, mom
+        out = jax.tree.map(upd, grads, opt_state["mom"], opt_state["master"])
+        masters = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        moms = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
+        return new_params, {"step": step, "master": masters, "mom": moms}
+
+    if cfg.name == "adafactor":
+        def upd(g, vr, vc, mst):
+            g32 = g.astype(F32)
+            if g32.ndim >= 2:
+                vr = cfg.b2 * vr + (1 - cfg.b2) * jnp.mean(g32 * g32, axis=-1)
+                vc = cfg.b2 * vc + (1 - cfg.b2) * jnp.mean(g32 * g32, axis=-2)
+                r = vr[..., None] / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), 1e-30)[..., None]
+                denom = jnp.sqrt(r * vc[..., None, :]) + cfg.eps
+            else:
+                vr = cfg.b2 * vr + (1 - cfg.b2) * g32 * g32
+                denom = jnp.sqrt(vr) + cfg.eps
+            upd_ = g32 / denom + cfg.weight_decay * mst.astype(F32)
+            mst = (mst.astype(F32) - lr * upd_).astype(mst.dtype)
+            return mst, vr, vc
+        triples = jax.tree.map(upd, grads, opt_state["vr"], opt_state["vc"],
+                               opt_state["master"])
+        is3 = lambda x: isinstance(x, tuple)
+        masters = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+        vrs = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+        vcs = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
+        return new_params, {"step": step, "master": masters, "vr": vrs, "vc": vcs}
+
+    # adamw
+    bc1 = 1 - cfg.b1 ** step.astype(F32)
+    bc2 = 1 - cfg.b2 ** step.astype(F32)
+
+    def upd(g, m, v, mst):
+        g32 = g.astype(F32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat, vhat = m / bc1, v / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * mst.astype(F32)
+        mst = (mst.astype(F32) - lr * step_).astype(mst.dtype)
+        return mst, m, v
+    triples = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                           opt_state["master"])
+    is3 = lambda x: isinstance(x, tuple)
+    masters = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+    ms = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+    vs = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
+    return new_params, {"step": step, "master": masters, "m": ms, "v": vs}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(F32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(F32) * scale).astype(x.dtype), tree), gn

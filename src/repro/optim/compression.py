@@ -1,0 +1,49 @@
+"""Gradient compression: int8 stochastic-rounding collective payloads.
+
+On a 1000+-node fleet the DP gradient all-reduce is the dominant cross-pod
+collective; compressing payloads to int8 cuts the collective-roofline term
+~4x (fp32) / ~2x (bf16).  We quantize per-tensor with a shared scale,
+stochastic rounding keeps the expectation unbiased, and the psum happens on
+int32 accumulators (no overflow for <= 2^23 participants at int8).
+
+Used inside ``shard_map``-based DP reductions (``compressed_psum_tree``) and
+unit-tested for unbiasedness in ``tests/test_compression.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_int8(x: jax.Array, key) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 with stochastic rounding. Returns (q, scale)."""
+    x32 = x.astype(F32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    noise = jax.random.uniform(key, x.shape, F32)
+    q = jnp.floor(y + noise)
+    return jnp.clip(q, -128, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def compressed_psum_tree(tree, axis_name: str, key):
+    """Quantize -> psum(int32) -> dequant, per leaf.  The scale itself is
+    pmax'd so every participant uses a common grid (required for exactness of
+    the integer sum)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for x, k in zip(leaves, keys):
+        x32 = x.astype(F32)
+        scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+        scale = jax.lax.pmax(scale, axis_name)
+        noise = jax.random.uniform(k, x.shape, F32)
+        q = jnp.clip(jnp.floor(x32 / scale + noise), -128, 127).astype(jnp.int32)
+        s = jax.lax.psum(q, axis_name)
+        out.append((s.astype(F32) * scale).astype(x.dtype))
+    return jax.tree.unflatten(treedef, out)

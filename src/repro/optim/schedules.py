@@ -1,0 +1,19 @@
+"""LR schedules (as scale factors applied to the base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup: int, total: int, final_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def constant(step, **_):
+    return jnp.ones_like(step, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant}

@@ -1,0 +1,1 @@
+from repro.serve.engine import build_serve_step, generate  # noqa: F401

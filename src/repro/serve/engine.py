@@ -1,0 +1,43 @@
+"""Serving engine: batched prefill + greedy/temperature decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ServeConfig
+
+I32 = jnp.int32
+
+
+def build_serve_step(model, scfg: ServeConfig):
+    """Returns jit'd (params, cache, tokens1, pos) -> (next_token, cache)."""
+    @functools.partial(jax.jit, static_argnames=())
+    def step(params, cache, tokens1, pos, key):
+        logits, cache = model.decode_step(params, cache, tokens1, pos)
+        logits = logits[:, -1, :]
+        if scfg.temperature > 0:
+            nxt = jax.random.categorical(key, logits / scfg.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        return nxt.astype(I32)[:, None], cache
+    return step
+
+
+def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
+             key=None):
+    """Prefill the prompt then decode ``max_new`` tokens. Returns (B, max_new)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B = batch["tokens"].shape[0]
+    cache = model.init_cache(params, B, scfg.max_len, jnp.dtype(scfg.cache_dtype))
+    logits, cache, pos = model.prefill(params, cache, batch)
+    last = logits[:, -1, :] if logits.ndim == 3 else logits
+    tok = jnp.argmax(last, -1).astype(I32)[:, None]
+    out = [tok]
+    step = build_serve_step(model, scfg)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        tok, cache = step(params, cache, tok, pos + i, sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.loop import run_train  # noqa: F401
+from repro.train.state import abstract_state, init_state, state_shardings  # noqa: F401
+from repro.train.step import build_train_step, make_loss_fn, make_step_fn  # noqa: F401

@@ -1,0 +1,62 @@
+"""Train state construction + sharding derivation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.distributed import sharding as shd
+from repro.models.layers import unbox
+
+
+def init_state(model, opt_cfg: optim.OptConfig, key):
+    boxed = model.init(key)
+    params = unbox(boxed)
+    return {"params": params, "opt": optim.init(opt_cfg, params),
+            "step": jnp.zeros((), jnp.int32), "rng": jax.random.PRNGKey(0)}
+
+
+def abstract_state(model, opt_cfg: optim.OptConfig):
+    """eval_shape twin of init_state (no allocation) + boxed axes tree."""
+    boxed = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    state = jax.eval_shape(
+        lambda: init_state(model, opt_cfg, jax.random.PRNGKey(0)))
+    return state, boxed
+
+
+def state_shardings(mesh, model, opt_cfg: optim.OptConfig, rules):
+    """NamedSharding pytree matching init_state's structure."""
+    state_shape, boxed = abstract_state(model, opt_cfg)
+    psh = shd.param_shardings(mesh, boxed, rules)
+    pshapes = jax.tree.map(lambda x: x.shape, state_shape["params"])
+
+    def _padded(s: NamedSharding, rank: int) -> list:
+        spec = list(s.spec)
+        return spec + [None] * (rank - len(spec))
+
+    def reduce_last(s: NamedSharding, shape):
+        # adafactor vr: params of rank >= 2 lose the last dim; 1-D params
+        # keep their shape (vr == zeros_like) and their sharding
+        if len(shape) < 2:
+            return s
+        return NamedSharding(mesh, P(*_padded(s, len(shape))[:-1]))
+
+    def reduce_second_last(s: NamedSharding, shape):
+        if len(shape) < 2:
+            return NamedSharding(mesh, P())  # vc is a zero-size stub
+        spec = _padded(s, len(shape))
+        return NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))
+
+    opt_sh = {}
+    for k in state_shape["opt"]:
+        if k == "step":
+            opt_sh[k] = NamedSharding(mesh, P())
+        elif k == "vr":
+            opt_sh[k] = jax.tree.map(reduce_last, psh, pshapes)
+        elif k == "vc":
+            opt_sh[k] = jax.tree.map(reduce_second_last, psh, pshapes)
+        else:  # master / m / v / mom mirror the params
+            opt_sh[k] = psh
+    rep = NamedSharding(mesh, P())
+    return {"params": psh, "opt": opt_sh, "step": rep, "rng": rep}

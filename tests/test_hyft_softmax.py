@@ -1,0 +1,128 @@
+"""Hyft softmax emulation: forward/backward behaviour + properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hyft import (HYFT16, HYFT16B, HYFT32, HyftConfig, hyft_jacobian,
+                             hyft_softmax, hyft_softmax_bwd, hyft_softmax_fwd)
+
+F32 = jnp.float32
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("cfg", [HYFT16, HYFT32, HYFT16B], ids=lambda c: c.io_dtype)
+class TestForward:
+    def test_close_to_exact(self, cfg):
+        z = jax.random.normal(KEY, (32, 128), F32) * 3
+        s = hyft_softmax_fwd(z, cfg).astype(F32)
+        ref = jax.nn.softmax(z, -1)
+        assert float(jnp.mean(jnp.abs(s - ref))) < 2e-3
+        # worst-case per-element error bounded by the double-Taylor chain
+        assert float(jnp.max(jnp.abs(s - ref))) < 0.13
+
+    def test_output_range_and_sum(self, cfg):
+        z = jax.random.normal(KEY, (64, 64), F32) * 5
+        s = hyft_softmax_fwd(z, cfg).astype(F32)
+        assert float(s.min()) >= 0.0
+        assert float(s.max()) <= 1.0 + 1e-3
+        sums = jnp.sum(s, -1)
+        assert float(jnp.abs(sums - 1).max()) < 0.15  # approx-normalized
+
+    def test_io_dtype(self, cfg):
+        z = jax.random.normal(KEY, (4, 16), F32)
+        assert hyft_softmax_fwd(z, cfg).dtype == cfg.dtype
+
+    def test_masked_positions_negligible(self, cfg):
+        # the numerator bypasses the adder-tree quantization (paper Fig. 2),
+        # so a masked entry is <= 2^-45-ish, not an exact zero in wide-
+        # exponent output formats (bf16/f32); f16 flushes it to 0
+        z = jnp.array([[1.0, -1e9, 2.0, -1e9]], F32)
+        s = hyft_softmax_fwd(z, cfg).astype(F32)
+        assert float(s[0, 1]) < 1e-9 and float(s[0, 3]) < 1e-9
+
+    def test_uniform_input(self, cfg):
+        s = hyft_softmax_fwd(jnp.zeros((2, 8), F32), cfg).astype(F32)
+        np.testing.assert_allclose(np.asarray(s), 0.125, atol=1e-3)
+
+    def test_shift_invariance_on_grid(self, cfg):
+        # shifting by an exactly-representable constant leaves d_raw intact
+        z = jax.random.normal(KEY, (8, 32), F32)
+        c = 2.0 ** -cfg.frac_bits * 64
+        a = hyft_softmax_fwd(z, cfg)
+        b = hyft_softmax_fwd(z + c, cfg)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestStep:
+    def test_step_changes_only_max_search(self):
+        z = jax.random.normal(KEY, (16, 64), F32) * 2
+        exact = jax.nn.softmax(z, -1)
+        for step in (1, 2, 4):
+            cfg = dataclasses.replace(HYFT32, step=step)
+            s = hyft_softmax_fwd(z, cfg).astype(F32)
+            # degrades gracefully with the stride (paper §3.1)
+            assert float(jnp.abs(s - exact).mean()) < 0.004 * step + 0.002
+
+    def test_step_missed_max_saturates(self):
+        # put the max at an odd index so step=2 misses it; outputs stay finite
+        z = jnp.zeros((1, 8), F32).at[0, 3].set(10.0)
+        cfg = dataclasses.replace(HYFT16, step=2)
+        s = hyft_softmax_fwd(z, cfg).astype(F32)
+        assert bool(jnp.all(jnp.isfinite(s)))
+        assert float(s[0, 3]) == float(jnp.max(s))
+
+
+class TestBackward:
+    def test_bwd_close_to_exact_vjp(self):
+        z = jax.random.normal(KEY, (8, 64), F32) * 2
+        s = jax.nn.softmax(z, -1)
+        dy = jax.random.normal(jax.random.PRNGKey(1), (8, 64), F32)
+        dz = hyft_softmax_bwd(s, dy, HYFT32).astype(F32)
+        ref = s * (dy - jnp.sum(dy * s, -1, keepdims=True))
+        assert float(jnp.abs(dz - ref).max()) < 5e-3
+
+    def test_custom_vjp_dtype_matches_primal(self):
+        z = jax.random.normal(KEY, (4, 16), F32)
+        g = jax.grad(lambda x: hyft_softmax(x, HYFT16).astype(F32).sum())(z)
+        assert g.dtype == z.dtype
+
+    def test_grad_modes(self):
+        z = jax.random.normal(KEY, (4, 32), F32)
+        w = jax.random.normal(jax.random.PRNGKey(2), (32,))
+        ge = jax.grad(lambda x: jnp.sum(
+            hyft_softmax(x, dataclasses.replace(HYFT32, grad="exact")) * w))(z)
+        gh = jax.grad(lambda x: jnp.sum(hyft_softmax(x, HYFT32) * w))(z)
+        gt = jax.grad(lambda x: jnp.sum(jax.nn.softmax(x, -1) * w))(z)
+        # both approximate the true grad; hyft-grad within a few % extra
+        assert float(jnp.abs(ge - gt).max()) < 0.05
+        assert float(jnp.abs(gh - gt).max()) < 0.06
+
+    def test_jacobian_structure(self):
+        s = jax.nn.softmax(jax.random.normal(KEY, (1, 6)), -1)
+        J = hyft_jacobian(s, HYFT32)[0].astype(F32)
+        s0 = np.asarray(s[0], np.float32)
+        ref = np.diag(s0) - np.outer(s0, s0)
+        np.testing.assert_allclose(np.asarray(J), ref, atol=5e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6), st.integers(4, 100))
+@settings(max_examples=25, deadline=None)
+def test_property_valid_distribution(seed, rows, cols):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols), F32) * 4
+    s = hyft_softmax_fwd(z, HYFT16).astype(F32)
+    assert bool(jnp.all(jnp.isfinite(s)))
+    assert float(s.min()) >= 0.0
+    assert float(jnp.abs(jnp.sum(s, -1) - 1).max()) < 0.2
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_argmax_preserved(seed):
+    """The paper's core accuracy claim: the attention *ordering* survives."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (8, 32), F32) * 3
+    s = hyft_softmax_fwd(z, HYFT16).astype(F32)
+    assert bool(jnp.all(jnp.argmax(s, -1) == jnp.argmax(z, -1)))

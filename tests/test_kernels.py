@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hyft import HYFT16, HYFT32, HyftConfig
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_hyft_attention
+from repro.kernels.hyft_softmax import (hyft_softmax_bwd_kernel,
+                                        hyft_softmax_fwd_kernel)
+
+F32 = jnp.float32
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("cfg", [HYFT16, HYFT32], ids=["h16", "h32"])
+@pytest.mark.parametrize("shape", [(8, 32), (37, 200), (3, 5, 64), (1, 1024)])
+def test_fwd_kernel_bit_exact(cfg, shape):
+    z = jax.random.normal(KEY, shape, F32) * 4
+    a = hyft_softmax_fwd_kernel(z, cfg, interpret=True)
+    b = ref.hyft_softmax_ref(z, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16, jnp.bfloat16])
+def test_fwd_kernel_input_dtypes(dtype):
+    z = (jax.random.normal(KEY, (16, 64), F32) * 3).astype(dtype)
+    a = hyft_softmax_fwd_kernel(z, HYFT16, interpret=True)
+    b = ref.hyft_softmax_ref(z, HYFT16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("step", [1, 2, 4])
+def test_fwd_kernel_step(step):
+    cfg = dataclasses.replace(HYFT32, step=step)
+    z = jax.random.normal(KEY, (16, 64), F32) * 3
+    a = hyft_softmax_fwd_kernel(z, cfg, interpret=True)
+    b = ref.hyft_softmax_ref(z, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("cfg", [HYFT16, HYFT32], ids=["h16", "h32"])
+def test_bwd_kernel_bit_exact(cfg):
+    s = jax.nn.softmax(jax.random.normal(KEY, (24, 96), F32), -1)
+    dy = jax.random.normal(jax.random.PRNGKey(1), (24, 96), F32)
+    a = hyft_softmax_bwd_kernel(s, dy, cfg, interpret=True)
+    b = ref.hyft_softmax_bwd_ref(s, dy, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_custom_vjp_matches_core():
+    from repro.core.hyft import hyft_softmax as core_softmax
+    z = jax.random.normal(KEY, (8, 32), F32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    gk = jax.grad(lambda x: jnp.sum(ops.hyft_softmax(x, HYFT32) * w))(z)
+    gc = jax.grad(lambda x: jnp.sum(core_softmax(x, HYFT32) * w))(z)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gc))
+
+
+class TestFlashAttention:
+    def _qkv(self, B=1, Hq=4, Hkv=2, S=128, D=32):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Hq, S, D), F32)
+        k = jax.random.normal(ks[1], (B, Hkv, S, D), F32)
+        v = jax.random.normal(ks[2], (B, Hkv, S, D), F32)
+        return q, k, v
+
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_blocked_oracle(self, causal):
+        q, k, v = self._qkv()
+        o = flash_hyft_attention(q, k, v, HYFT32, causal=causal,
+                                 block_q=64, block_k=64, interpret=True)
+        oref = ref.flash_hyft_attention_ref(q, k, v, HYFT32, causal=causal,
+                                            block_q=64, block_k=64)
+        # identical arithmetic; only fp32 matmul association differs
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                                   atol=2e-5, rtol=1e-5)
+
+    def test_single_block_close_to_unfused(self):
+        # one KV block => no online rescale; the remaining difference is the
+        # division order: flash divides the PV accumulation (paper's DIV unit
+        # after the pipeline), unfused divides each probability first --
+        # bounded by one extra log-div Taylor application
+        q, k, v = self._qkv(S=64)
+        o = flash_hyft_attention(q, k, v, HYFT32, causal=True,
+                                 block_q=64, block_k=64, interpret=True)
+        ou = ref.attention_ref(q, k, v, HYFT32, causal=True)
+        assert float(jnp.abs(o - ou).max()) < 0.25
+        assert float(jnp.abs(o - ou).mean()) < 0.02
+
+    def test_close_to_exact_attention(self):
+        q, k, v = self._qkv(S=256)
+        o = flash_hyft_attention(q, k, v, HYFT32, causal=True, interpret=True)
+        oe = ref.attention_ref(q, k, v, None, causal=True)
+        # bounded by the Hyft approximation chain, not by fusion
+        assert float(jnp.abs(o - oe).max()) < 0.35
+        assert float(jnp.abs(o - oe).mean()) < 0.02
+
+    def test_gqa_groups(self):
+        q, k, v = self._qkv(B=2, Hq=8, Hkv=2, S=64, D=16)
+        o = flash_hyft_attention(q, k, v, HYFT16, causal=True,
+                                 block_q=32, block_k=32, interpret=True)
+        oref = ref.flash_hyft_attention_ref(q, k, v, HYFT16, causal=True,
+                                            block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=1e-4)
+
+    def test_return_stats_shapes(self):
+        q, k, v = self._qkv(S=64)
+        o, m, l = flash_hyft_attention(q, k, v, HYFT32, causal=False,
+                                       block_q=32, block_k=32,
+                                       interpret=True, return_stats=True)
+        assert m.shape == (1, 4, 64) and l.shape == (1, 4, 64)
+        assert m.dtype == jnp.int32
+
+
+class TestChunkedAttention:
+    def test_chunked_matches_flash_math(self):
+        from repro.models.attention import chunked_hyft_attention
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 4, 128, 32), F32)
+        k = jax.random.normal(ks[1], (1, 2, 128, 32), F32)
+        v = jax.random.normal(ks[2], (1, 2, 128, 32), F32)
+        a = chunked_hyft_attention(q, k, v, HYFT32, True, 64, 0)
+        b = flash_hyft_attention(q, k, v, HYFT32, causal=True, block_q=128,
+                                 block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=1e-5)
+
+    def test_chunked_backward_close_to_exact(self):
+        from repro.models.attention import chunked_hyft_attention
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 64, 16), F32)
+        k = jax.random.normal(ks[1], (1, 2, 64, 16), F32)
+        v = jax.random.normal(ks[2], (1, 2, 64, 16), F32)
+
+        def f_hyft(q, k, v):
+            return jnp.sum(chunked_hyft_attention(q, k, v, HYFT32, True, 32, 0))
+
+        def f_exact(q, k, v):
+            z = jnp.einsum("bhqd,bhkd->bhqk", q, k) * 16 ** -0.5
+            mask = jnp.tril(jnp.ones((64, 64), bool))
+            z = jnp.where(mask, z, -3e38)
+            p = jax.nn.softmax(z, -1)
+            return jnp.sum(jnp.einsum("bhqk,bhkd->bhqd", p, v))
+
+        gh = jax.grad(f_hyft, argnums=(0, 1, 2))(q, k, v)
+        ge = jax.grad(f_exact, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gh, ge):
+            assert float(jnp.abs(a - b).max()) < 0.35

@@ -1,0 +1,191 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, smoke_config
+from repro.configs.shapes import ShapeSpec, concrete_batch
+from repro.models import build_model
+from repro.models.layers import unbox
+
+F32 = jnp.float32
+TINY = ShapeSpec("tiny", "train", 32, 2)
+
+
+def _setup(name, **overrides):
+    overrides.setdefault("softmax_impl", "hyft16")
+    cfg = smoke_config(get_config(name)).with_(**overrides)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_train_step_finite(name):
+    cfg, model, params = _setup(name)
+    batch = concrete_batch(cfg, TINY)
+    loss, metrics = model.loss(params, batch, remat="full")
+    assert jnp.isfinite(loss), name
+    g = jax.grad(lambda p: model.loss(p, batch, remat="full")[0])(params)
+    gn = sum(jnp.sum(x.astype(F32) ** 2) for x in jax.tree.leaves(g))
+    assert jnp.isfinite(gn), name
+    assert float(gn) > 0, f"{name}: gradient is identically zero"
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_output_shapes(name):
+    cfg, model, params = _setup(name)
+    batch = concrete_batch(cfg, TINY)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        mem = encdec.encode(params, batch["frames"], cfg, remat="none")
+        assert mem.shape == (2, cfg.frontend_len, cfg.d_model)
+        hid = encdec.decode_train(params, batch["tokens"], mem, cfg, remat="none")
+        assert hid.shape == (2, 32, cfg.d_model)
+    else:
+        from repro.models import transformer
+        hid, aux = transformer.forward(params, batch["tokens"], cfg,
+                                       embeds_prefix=batch.get("embeds"),
+                                       remat="none")
+        # vlm batches carry (32 - frontend_len) text tokens + the prefix
+        assert hid.shape == (2, 32, cfg.d_model)
+        logits = transformer.logits_fn(params, hid, cfg)
+        assert logits.shape[-1] == cfg.vocab
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "mamba2-370m", "zamba2-7b",
+                                  "whisper-medium", "phi3.5-moe-42b-a6.6b"])
+def test_decode_step_runs(name):
+    cfg, model, params = _setup(name)
+    B, max_len = 2, 16
+    cache = model.init_cache(params, B, max_len, jnp.float32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache2 = model.decode_step(params, cache, tok, 0, )
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    logits3, _ = model.decode_step(params, cache2, tok, 1)
+    assert bool(jnp.all(jnp.isfinite(logits3)))
+
+
+def test_decode_matches_teacher_forced_dense():
+    """Greedy decode logits == forward logits at the same positions."""
+    cfg, model, params = _setup("qwen2-1.5b", softmax_impl="exact",
+                                compute_dtype="float32")
+    from repro.models import transformer
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    hid, _ = transformer.forward(params, toks, cfg, remat="none")
+    full_logits = transformer.logits_fn(params, hid, cfg)
+
+    cache = model.init_cache(params, B, S, jnp.float32)
+    step_logits = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1], t)
+        step_logits.append(lg[:, 0])
+    step_logits = jnp.stack(step_logits, 1)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full_logits), atol=2e-3, rtol=2e-3)
+
+
+def test_ssm_decode_matches_train():
+    """SSD chunked train path == sequential decode recurrence."""
+    cfg, model, params = _setup("mamba2-370m", compute_dtype="float32")
+    from repro.models import transformer
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab)
+    hid, _ = transformer.forward(params, toks, cfg, remat="none")
+    full_logits = transformer.logits_fn(params, hid, cfg)
+
+    cache = model.init_cache(params, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1], t)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_hybrid_shared_attn_fires():
+    """zamba2: layers with flag apply the shared block -> different output
+    than pure-ssm stack."""
+    cfg, model, params = _setup("zamba2-7b", compute_dtype="float32")
+    from repro.models import transformer
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 8), 0, cfg.vocab)
+    hid, _ = transformer.forward(params, toks, cfg, remat="none")
+    # zero out the shared attention -> output must change
+    import copy
+    p2 = jax.tree.map(lambda x: x, params)
+    p2["shared_attn"] = jax.tree.map(jnp.zeros_like, params["shared_attn"])
+    hid2, _ = transformer.forward(p2, toks, cfg, remat="none")
+    assert float(jnp.abs(hid - hid2).max()) > 1e-4
+
+
+def test_vlm_prefix_changes_output():
+    cfg, model, params = _setup("internvl2-1b", compute_dtype="float32")
+    batch = concrete_batch(cfg, TINY)
+    l1, _ = model.loss(params, batch, remat="none")
+    batch2 = dict(batch, embeds=batch["embeds"] + 1.0)
+    l2, _ = model.loss(params, batch2, remat="none")
+    assert float(l1) != float(l2)
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity_factor -> 0 almost all tokens are dropped: output ~ 0."""
+    cfg, model, params = _setup("phi3.5-moe-42b-a6.6b")
+    from repro.models.moe import moe_apply
+    lp = jax.tree.map(lambda x: x[0], params["blocks"]["moe"])
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, cfg.d_model))
+    y_full, _ = moe_apply(lp, x, cfg)
+    y_min, _ = moe_apply(lp, x, cfg.with_(capacity_factor=1e-9))
+    nz = lambda y: int(jnp.sum(jnp.any(jnp.abs(y) > 0, -1)))
+    # capacity floor is 1 slot/expert: at most E*k tokens survive
+    assert nz(y_min) <= cfg.n_experts * cfg.moe_top_k
+    assert nz(y_full) > nz(y_min)
+
+
+@pytest.mark.parametrize("name", ["mamba2-370m", "zamba2-7b", "whisper-medium"])
+def test_parallel_prefill_matches_sequential(name):
+    """The §Perf prefill lever is numerics-preserving: the one-pass chunked
+    fill produces the same logits and a decode-equivalent cache as the
+    baseline token-by-token scan."""
+    cfg, model_seq, params = _setup(name, compute_dtype="float32",
+                                    softmax_impl="exact")
+    from repro.models import build_model
+    model_par = build_model(cfg.with_(parallel_prefill=True))
+    S = 16  # multiple of the smoke ssm_chunk
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, S), 0,
+                                          cfg.vocab, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.frontend_len, cfg.frontend_dim))
+    c1 = model_seq.init_cache(params, 2, S + 4, jnp.float32)
+    l1, cache1, _ = model_seq.prefill(params, c1, batch)
+    c2 = model_par.init_cache(params, 2, S + 4, jnp.float32)
+    l2, cache2, _ = model_par.prefill(params, c2, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=2e-4, rtol=2e-4)
+    tok = jnp.argmax(l2.reshape(2, -1), -1)[:, None].astype(jnp.int32)
+    d1, _ = model_seq.decode_step(params, cache1, tok, S)
+    d2, _ = model_par.decode_step(params, cache2, tok, S)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_hybrid_shared_cache_per_invocation():
+    """Each shared-attention invocation owns a KV cache slice (stacked on a
+    leading invocation axis) — invocations must not overwrite each other."""
+    from repro.models.transformer import hybrid_n_invocations
+    cfg, model, params = _setup("zamba2-7b", compute_dtype="float32")
+    ninv = hybrid_n_invocations(cfg)
+    assert ninv == cfg.n_layers // cfg.attn_every
+    cache = model.init_cache(params, 2, 8, jnp.float32)
+    assert cache["shared_attn"]["k"].shape[0] == ninv
+    tok = jnp.ones((2, 1), jnp.int32)
+    _, c2 = model.decode_step(params, cache, tok, 0)
+    k = np.asarray(c2["shared_attn"]["k"][:, :, :, 0])  # written position
+    # every invocation wrote its own (distinct) K at position 0
+    assert ninv >= 2
+    assert not np.allclose(k[0], k[1])

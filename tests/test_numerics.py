@@ -1,0 +1,130 @@
+"""Unit + property tests for the bit-level numeric primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import numerics as nm
+
+F32 = jnp.float32
+
+
+class TestFp2Fx:
+    def test_roundtrip_within_half_ulp(self):
+        x = jnp.linspace(-7.9, 7.9, 1001, dtype=F32)
+        raw = nm.fp2fx(x, frac_bits=10, total_bits=16)
+        back = nm.fx2fp(raw, 10)
+        assert float(jnp.max(jnp.abs(back - x))) <= 0.5 * 2.0 ** -10 + 1e-7
+
+    def test_saturation(self):
+        x = jnp.array([1e9, -1e9, jnp.inf, -jnp.inf], F32)
+        raw = nm.fp2fx(x, 10, 16)
+        assert int(raw[0]) == 2 ** 15 - 1
+        assert int(raw[1]) == -(2 ** 15)
+        assert int(raw[2]) == 2 ** 15 - 1
+        assert int(raw[3]) == -(2 ** 15)
+
+    @given(st.floats(-30, 30), st.integers(6, 20))
+    @settings(max_examples=50, deadline=None)
+    def test_quantization_grid(self, x, f):
+        raw = nm.fp2fx(jnp.float32(x), f, 24)
+        want = min(max(round(x * 2 ** f), -(2 ** 23)), 2 ** 23 - 1)
+        # round-to-nearest on the grid (fp32 scaling is exact below 2^24;
+        # allow 2 ulp near the exactness boundary)
+        assert abs(int(raw) - want) <= max(2, abs(want) * 2 ** -22)
+
+
+class TestPow2Float:
+    def test_exact_powers(self):
+        k = jnp.arange(-126, 128, dtype=jnp.int32)
+        got = nm.pow2_float(k)
+        want = 2.0 ** k.astype(F32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_flush_to_zero(self):
+        assert float(nm.pow2_float(jnp.int32(-127))) == 0.0
+        assert float(nm.pow2_float(jnp.int32(-300))) == 0.0
+
+
+class TestExpUnit:
+    def test_matches_exp_within_taylor_bound(self):
+        d = jnp.linspace(-8, 0, 801, dtype=F32)
+        raw = nm.fp2fx(d, 16, 24)
+        e, m = nm.exp_unit(raw, 16, 16)
+        val = (1.0 + m.astype(F32) / 2 ** 16) * nm.pow2_float(e)
+        rel = jnp.abs(val - jnp.exp(d)) / jnp.exp(d)
+        # compound worst case on [-8,0]: Taylor 2^u(1+v/2) (~6.2% at
+        # v~-0.57) x Booth log2e drift (2^(0.0052|d|), ~2.9% at d=-8) ~ 9.3%;
+        # far tail drifts more relatively but is absolutely negligible
+        assert float(jnp.max(rel)) < 0.095
+
+    def test_far_tail_absolutely_negligible(self):
+        d = jnp.linspace(-30, -8, 401, dtype=F32)
+        raw = nm.fp2fx(d, 16, 24)
+        e, m = nm.exp_unit(raw, 16, 16)
+        val = (1.0 + m.astype(F32) / 2 ** 16) * nm.pow2_float(e)
+        assert float(jnp.max(jnp.abs(val - jnp.exp(d)))) < 1e-4
+
+    def test_exp_zero_is_one(self):
+        e, m = nm.exp_unit(jnp.zeros((1,), jnp.int32), 16, 16)
+        assert int(e[0]) == 0 and int(m[0]) == 0
+
+    def test_saturates_positive_input(self):
+        # strided max can leave d > 0; unit must clamp, not wrap
+        raw = nm.fp2fx(jnp.array([3.0], F32), 16, 24)
+        e, m = nm.exp_unit(raw, 16, 16)
+        val = (1.0 + m.astype(F32) / 2 ** 16) * nm.pow2_float(e)
+        assert float(val[0]) == 1.0
+
+
+class TestLogDivMul:
+    @given(st.floats(0.01, 100.0), st.floats(0.01, 100.0))
+    @settings(max_examples=80, deadline=None)
+    def test_log_div_relative_bound(self, a, b):
+        _, ea, ma = nm.float_fields(jnp.float32(a), 16)
+        _, eb, mb = nm.float_fields(jnp.float32(b), 16)
+        got = float(nm.log_div(ea, ma, eb, mb, 16))
+        # double Taylor: log2(1+x)~x both ways -> <= ~12.6% relative
+        assert abs(got - a / b) / (a / b) < 0.13
+
+    def test_log_div_exact_for_powers_of_two(self):
+        for a, b in [(4.0, 2.0), (1.0, 8.0), (0.5, 0.25)]:
+            _, ea, ma = nm.float_fields(jnp.float32(a), 16)
+            _, eb, mb = nm.float_fields(jnp.float32(b), 16)
+            assert float(nm.log_div(ea, ma, eb, mb, 16)) == a / b
+
+    @given(st.floats(-50, 50), st.floats(-50, 50))
+    @settings(max_examples=80, deadline=None)
+    def test_log_mul_relative_bound(self, a, b):
+        if abs(a) < 1e-3 or abs(b) < 1e-3:
+            return
+        got = float(nm.log_mul(jnp.float32(a), jnp.float32(b), 16))
+        # half-range mantissa truncation: <= 2^-8 relative on top of exact
+        assert abs(got - a * b) / abs(a * b) < 0.005
+
+    def test_log_mul_signs_and_zero(self):
+        assert float(nm.log_mul(jnp.float32(-2.0), jnp.float32(3.0), 16)) < 0
+        assert float(nm.log_mul(jnp.float32(-2.0), jnp.float32(-3.0), 16)) > 0
+        assert float(nm.log_mul(jnp.float32(0.0), jnp.float32(3.0), 16)) == 0.0
+
+
+class TestAdderTree:
+    def test_fx_quantize_truncates_toward_neg_inf(self):
+        x = jnp.array([1.2345, -1.2345], F32)
+        q = nm.fx_quantize(x, 8)
+        assert float(q[0]) == np.floor(1.2345 * 256) / 256
+        assert float(q[1]) == np.floor(-1.2345 * 256) / 256
+
+    def test_expfloat_to_fx_exact_grid(self):
+        e = jnp.array([-1, -3], jnp.int32)
+        m = jnp.array([0, 1 << 15], jnp.int32)  # 1.0 -> 0.5 ; 1.5 -> 0.1875
+        q = nm.expfloat_to_fx(e, m, 16, 14)
+        assert float(q[0]) == 0.5
+        assert float(q[1]) == 1.5 / 8
+
+    def test_lod_refloat_truncation(self):
+        s = jnp.float32(5.75)  # 2^2 * 1.4375
+        e, m = nm.lod_refloat(s, 4)
+        assert int(e) == 2
+        assert int(m) == int(0.4375 * 16)

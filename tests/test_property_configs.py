@@ -1,0 +1,82 @@
+"""Hypothesis property tests over the accelerator's *configuration space*.
+
+The paper's selling point is reconfigurability (Precision, adder width,
+STEP, io format).  These properties must hold for every legal HyftConfig,
+not just the two presets — kernels and oracle stay bit-identical, outputs
+stay valid distributions, and more bits never hurt accuracy (monotonicity
+up to quantization noise).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hyft import HyftConfig, hyft_softmax_bwd, hyft_softmax_fwd
+
+F32 = jnp.float32
+
+
+def _cfg(io, total, frac, mant, acc, step):
+    return HyftConfig(io_dtype=io, total_bits=total, frac_bits=frac,
+                      mant_bits=min(mant, frac), acc_bits=acc, step=step)
+
+
+legal_cfgs = st.builds(
+    _cfg,
+    io=st.sampled_from(["float32", "float16", "bfloat16"]),
+    total=st.integers(12, 28),
+    frac=st.integers(6, 11),
+    mant=st.integers(6, 16),
+    acc=st.integers(8, 22),
+    step=st.sampled_from([1, 2, 4]),
+).filter(lambda c: c.frac_bits < c.total_bits)
+
+
+@given(legal_cfgs, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_any_config_valid_distribution(cfg, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (4, 32), F32) * 3
+    s = hyft_softmax_fwd(z, cfg).astype(F32)
+    assert bool(jnp.all(jnp.isfinite(s)))
+    assert float(s.min()) >= 0.0
+    assert float(s.max()) <= 1.0 + 2.0 ** -6  # one output-format ulp of slack
+
+
+@given(legal_cfgs, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_any_config_kernel_matches_oracle(cfg, seed):
+    from repro.kernels.hyft_softmax import hyft_softmax_fwd_kernel
+    z = jax.random.normal(jax.random.PRNGKey(seed), (5, 48), F32) * 3
+    a = hyft_softmax_fwd_kernel(z, cfg, interpret=True)
+    b = hyft_softmax_fwd(z, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_more_precision_never_hurts(seed):
+    """mean abs error is (weakly) monotone in Precision at fixed structure."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (16, 64), F32) * 3
+    ref = jax.nn.softmax(z, -1)
+    errs = []
+    for f in (6, 8, 10):
+        cfg = HyftConfig(io_dtype="float32", total_bits=f + 8, frac_bits=f,
+                         mant_bits=f, acc_bits=f + 4)
+        s = hyft_softmax_fwd(z, cfg).astype(F32)
+        errs.append(float(jnp.mean(jnp.abs(s - ref))))
+    assert errs[0] >= errs[-1] - 1e-4  # low-bit config can't beat high-bit
+
+
+@given(legal_cfgs, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_any_config_bwd_finite_and_centered(cfg, seed):
+    """Backward output is finite and (like the exact VJP) sums to ~0 per row
+    when dy is constant: dz = s*(c - c*sum(s)) ~ s*c*(1-sum s) ~ 0."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    s = jax.nn.softmax(jax.random.normal(k1, (4, 32), F32), -1)
+    dy = jnp.ones((4, 32), F32)
+    dz = hyft_softmax_bwd(s, dy, cfg).astype(F32)
+    assert bool(jnp.all(jnp.isfinite(dz)))
+    assert float(jnp.abs(jnp.sum(dz, -1)).max()) < 0.1

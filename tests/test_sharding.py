@@ -1,0 +1,81 @@
+"""Sharding rules: spec generation, divisibility guards, cache specs.
+
+Uses AbstractMesh so the production 16x16 geometry is testable on one CPU
+device (no device allocation happens for spec math).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.models.layers import is_param
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_for_axes_basic():
+    rules = shd.default_rules(MESH)
+    assert shd.spec_for_axes(("embed", "mlp"), rules) == P(None, "model")
+    assert shd.spec_for_axes(("batch", "seq", "embed"), rules)[0] == "data"
+
+
+def test_spec_no_duplicate_mesh_axes():
+    rules = dict(shd.default_rules(MESH))
+    rules["embed"] = "model"  # would collide with mlp -> model
+    spec = shd.spec_for_axes(("embed", "mlp"), rules)
+    flat = [a for e in spec if e for a in (e if isinstance(e, tuple) else (e,))]
+    assert len(flat) == len(set(flat))
+
+
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["single", "multi"])
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_param_shardings_divisible_all_archs(mesh, name):
+    """Every parameter of every FULL-SIZE arch gets a legal sharding on the
+    production meshes (the dry-run's precondition)."""
+    cfg = get_config(name)
+    model = build_model(cfg)
+    boxed = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    rules = shd.default_rules(mesh, cfg, fsdp=True)
+    psh = shd.param_shardings(mesh, boxed, rules)
+
+    def check(p, s):
+        if not is_param(p):
+            return
+        shape = p.value.shape
+        for dim, entry in zip(shape, tuple(s.spec) + (None,) * len(shape)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (name, shape, s.spec)
+
+    jax.tree.map(check, boxed, psh, is_leaf=is_param)
+
+
+def test_cache_shardings_by_key():
+    cfg = get_config("zamba2-7b")
+    model = build_model(cfg)
+    from repro.models.layers import unbox
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    cache = jax.eval_shape(
+        lambda: model.init_cache(unbox(params), 128, 32768, jnp.bfloat16))
+    rules = shd.default_rules(MESH, cfg)
+    csh = shd.cache_shardings(MESH, cache, rules)
+    # attention KV: seq axis -> model (sequence parallel)
+    kspec = csh["shared_attn"]["k"].spec
+    assert "model" in tuple(kspec)
+    # ssm state: heads -> model
+    sspec = csh["blocks"]["ssm"].spec
+    assert "model" in tuple(sspec)
+
+
+def test_divisible_drops_bad_entries():
+    spec = P("model")
+    out = shd._divisible(spec, (51865,), MESH)  # whisper vocab % 16 != 0
+    assert tuple(out) == ()

@@ -1,0 +1,227 @@
+"""Substrate tests: data determinism, optimizers, checkpointing, fault
+tolerance, gradient accumulation, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.data.synthetic import DataConfig, classify_batch, lm_batch
+
+F32 = jnp.float32
+
+
+class TestData:
+    def test_deterministic(self):
+        cfg = DataConfig(vocab=97, seq_len=16, global_batch=4)
+        a, b = lm_batch(cfg, 7), lm_batch(cfg, 7)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    def test_steps_differ(self):
+        cfg = DataConfig(vocab=97, seq_len=16, global_batch=4)
+        a, b = lm_batch(cfg, 1), lm_batch(cfg, 2)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+    def test_host_shards_disjoint_and_sized(self):
+        cfg0 = DataConfig(vocab=97, seq_len=8, global_batch=8, n_hosts=2,
+                          host_id=0)
+        cfg1 = DataConfig(vocab=97, seq_len=8, global_batch=8, n_hosts=2,
+                          host_id=1)
+        a, b = lm_batch(cfg0, 3), lm_batch(cfg1, 3)
+        assert a["tokens"].shape == (4, 8)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+    def test_targets_shifted(self):
+        cfg = DataConfig(vocab=97, seq_len=16, global_batch=2)
+        d = lm_batch(cfg, 0)
+        np.testing.assert_array_equal(np.asarray(d["tokens"][:, 1:]),
+                                      np.asarray(d["targets"][:, :-1]))
+
+    def test_classify_markers(self):
+        d = classify_batch(0, 0, 32, 24, vocab=64)
+        toks, labels = np.asarray(d["tokens"]), np.asarray(d["labels"])
+        for i in range(32):
+            counts = [np.sum(toks[i] == c + 1) for c in range(4)]
+            assert int(np.argmax(counts)) == labels[i]
+
+
+class TestOptim:
+    def _quad(self, opt_name):
+        target = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        cfg = optim.OptConfig(name=opt_name, lr=0.1, weight_decay=0.0)
+        st = optim.init(cfg, params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, st = optim.update(cfg, g, st, params)
+        return float(jnp.abs(params["w"] - target).max())
+
+    @pytest.mark.parametrize("name", ["adamw", "sgd", "adafactor"])
+    def test_converges_on_quadratic(self, name):
+        assert self._quad(name) < 0.15
+
+    def test_adamw_master_weights_bf16_params(self):
+        params = {"w": jnp.ones(4, jnp.bfloat16)}
+        cfg = optim.OptConfig(name="adamw", lr=1e-3)
+        st = optim.init(cfg, params)
+        assert st["master"]["w"].dtype == jnp.float32
+        g = {"w": jnp.full(4, 1e-4, F32)}
+        p2, st2 = optim.update(cfg, g, st, params)
+        assert p2["w"].dtype == jnp.bfloat16
+        # master accumulates below bf16 resolution
+        assert float(jnp.abs(st2["master"]["w"] - 1).max()) > 0
+
+    def test_adafactor_memory_factored(self):
+        params = {"w": jnp.ones((64, 32))}
+        st = optim.init(optim.OptConfig(name="adafactor"), params)
+        assert st["vr"]["w"].shape == (64,)
+        assert st["vc"]["w"].shape == (32,)
+
+    def test_clip_by_global_norm(self):
+        tree = {"a": jnp.full(4, 10.0)}
+        clipped, gn = optim.clip_by_global_norm(tree, 1.0)
+        assert abs(float(optim.global_norm(clipped)) - 1.0) < 1e-5
+        assert float(gn) == 20.0
+
+
+class TestGradAccum:
+    def test_microbatch_equivalent(self):
+        from repro.configs import get_config, smoke_config
+        from repro.configs.base import TrainConfig
+        from repro.configs.shapes import ShapeSpec, concrete_batch
+        from repro.models import build_model
+        from repro.models.layers import unbox
+        from repro.train.step import make_step_fn
+        from repro.train.state import init_state
+
+        cfg = smoke_config(get_config("olmo-1b")).with_(
+            softmax_impl="exact", compute_dtype="float32")
+        model = build_model(cfg)
+        ocfg = optim.OptConfig(name="sgd", lr=1e-2, weight_decay=0.0)
+        batch = concrete_batch(cfg, ShapeSpec("t", "train", 16, 8))
+
+        outs = []
+        for mb in (0, 2):
+            tcfg = TrainConfig(microbatch=mb, grad_clip=1e9, z_loss=0.0)
+            state = init_state(model, ocfg, jax.random.PRNGKey(0))
+            step = make_step_fn(model, tcfg, ocfg)
+            state2, metrics = jax.jit(step)(state, batch)
+            outs.append((metrics["loss"], state2["params"]))
+        np.testing.assert_allclose(float(outs[0][0]), float(outs[1][0]),
+                                   rtol=2e-5)
+        for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=2e-5, rtol=2e-4)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        from repro.checkpoint import checkpointer as ck
+        state = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)},
+                 "step": jnp.int32(5)}
+        ck.save(str(tmp_path), 5, state)
+        like = jax.eval_shape(lambda: state)
+        restored, step = ck.restore(str(tmp_path), 5, like)
+        assert step == 5
+        for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+            assert x.dtype == y.dtype
+
+    def test_keep_k_gc(self, tmp_path):
+        from repro.checkpoint import checkpointer as ck
+        for s in range(6):
+            ck.save(str(tmp_path), s, {"x": jnp.ones(2)}, keep=2)
+        assert ck.all_steps(str(tmp_path)) == [4, 5]
+
+    def test_no_partial_checkpoint_visible(self, tmp_path):
+        from repro.checkpoint import checkpointer as ck
+        os.makedirs(tmp_path / "step_00000009.tmp")  # simulated crash debris
+        ck.save(str(tmp_path), 3, {"x": jnp.ones(2)})
+        assert ck.all_steps(str(tmp_path)) == [3]
+        assert ck.latest_step(str(tmp_path)) == 3
+
+
+class TestFaultTolerance:
+    def test_restart_manager_resumes(self, tmp_path):
+        from repro.checkpoint import checkpointer as ck
+        from repro.distributed.fault_tolerance import RestartManager
+        calls = []
+
+        def body(start):
+            calls.append(start)
+            state = {"x": jnp.full(2, float(start))}
+            for step in range(start, 10):
+                state = {"x": state["x"] + 1}
+                if step == 4 and len(calls) == 1:
+                    ck.save(str(tmp_path), step + 1, state)
+                    raise RuntimeError("injected node failure")
+            return 10
+
+        rm = RestartManager(str(tmp_path), max_restarts=2)
+        assert rm.run(body) == 10
+        assert calls == [0, 5]  # resumed from the checkpointed step
+
+    def test_restart_bounded(self, tmp_path):
+        from repro.distributed.fault_tolerance import RestartManager
+
+        def body(start):
+            raise RuntimeError("always fails")
+
+        with pytest.raises(RuntimeError):
+            RestartManager(str(tmp_path), max_restarts=2).run(body)
+
+    def test_straggler_monitor(self):
+        from repro.distributed.fault_tolerance import StragglerMonitor
+        m = StragglerMonitor(threshold=3.0, warm=3)
+        for _ in range(10):
+            m.observe(0.1)
+        assert m.flagged == 0
+        assert m.observe(1.0) is True
+        assert m.flagged == 1
+        # outlier did not poison the EMA
+        assert m.ema < 0.2
+
+    def test_elastic_remesh_shrinks_data_axis(self):
+        from repro.distributed.fault_tolerance import elastic_remesh
+        mesh = elastic_remesh(model_size=1)
+        assert mesh.shape["model"] == 1
+        assert mesh.shape["data"] >= 1
+
+
+class TestCompression:
+    def test_int8_quantize_bounded_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3
+        from repro.optim.compression import dequantize_int8, quantize_int8
+        q, s = quantize_int8(x, jax.random.PRNGKey(1))
+        err = jnp.abs(dequantize_int8(q, s) - x)
+        assert float(err.max()) <= float(s) + 1e-6
+
+    def test_int8_stochastic_unbiased(self):
+        x = jnp.full((8,), 0.3)
+        from repro.optim.compression import dequantize_int8, quantize_int8
+        vals = []
+        for i in range(300):
+            q, s = quantize_int8(x, jax.random.PRNGKey(i))
+            vals.append(np.asarray(dequantize_int8(q, s)))
+        assert abs(np.mean(vals) - 0.3) < 2e-3
+
+    def test_compressed_psum_tree_axis1(self):
+        from functools import partial
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.optim.compression import compressed_psum_tree
+        mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+        tree = {"g": jnp.linspace(-1, 1, 16)}
+
+        @partial(jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P())
+        def f(t):
+            return compressed_psum_tree(t, "dp", jax.random.PRNGKey(0))
+        out = f(tree)
+        np.testing.assert_allclose(np.asarray(out["g"]),
+                                   np.asarray(tree["g"]), atol=0.02)
