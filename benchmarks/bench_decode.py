@@ -1,0 +1,64 @@
+"""Masked decode-attention latency: fused kernel vs unfused vs chunked.
+
+The serving scenario the fused path exists for: one query row per sequence
+(Sq=1) against a padded KV cache with a per-batch validity mask.  All three
+modes honor the shared mask contract (repro.kernels.ops), so this is an
+apples-to-apples latency comparison of the same masked computation.
+
+Absolute numbers are CPU times (the Pallas kernel runs in interpreter mode
+here; on TPU it is the compiled path), so read the *relative* trend and the
+fact that the fused path no longer falls back to unfused when a mask is
+present — the regression this benchmark guards.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hyft import HYFT32
+from repro.kernels import ops
+from repro.models.attention import chunked_hyft_attention, unfused_attention
+
+F32 = jnp.float32
+SHAPES = [  # (B, Hq, Hkv, Sk, D, valid_len)
+    (4, 8, 4, 512, 64, 300),
+    (1, 16, 8, 2048, 64, 1500),
+]
+
+
+def _time(fn, *args, iters=10):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    for B, Hq, Hkv, Sk, D, valid in SHAPES:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, Hq, 1, D), F32)
+        k = jax.random.normal(ks[1], (B, Hkv, Sk, D), F32)
+        v = jax.random.normal(ks[2], (B, Hkv, Sk, D), F32)
+        mask = (jnp.arange(Sk)[None, :] < valid).astype(F32).repeat(B, 0)
+
+        unfused = jax.jit(lambda q, k, v, m: unfused_attention(
+            q, k, v, "hyft32", causal=False, kv_len_mask=m > 0))
+        fused = jax.jit(lambda q, k, v, m: ops.hyft_attention(
+            q, k, v, HYFT32, causal=False, kv_len_mask=m))
+        chunked = jax.jit(lambda q, k, v, m: chunked_hyft_attention(
+            q, k, v, HYFT32, False, min(512, Sk), 0, m))
+
+        shape = f"B{B}xH{Hq}xS{Sk}(valid={valid})xD{D}"
+        us_u = _time(unfused, q, k, v, mask)
+        us_f = _time(fused, q, k, v, mask)
+        us_c = _time(chunked, q, k, v, mask)
+        report(f"bench_decode,unfused,shape={shape},us_per_step={us_u:.1f}")
+        report(f"bench_decode,kernel,shape={shape},us_per_step={us_f:.1f},"
+               f"vs_unfused={us_f / us_u:.2f}")
+        report(f"bench_decode,chunked,shape={shape},us_per_step={us_c:.1f},"
+               f"vs_unfused={us_c / us_u:.2f}")

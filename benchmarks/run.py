@@ -4,8 +4,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_softmax, roofline_report, table1_accuracy,
-                            table2_training, table3_hardware)
+    from benchmarks import (bench_decode, bench_softmax, roofline_report,
+                            table1_accuracy, table2_training, table3_hardware)
 
     def report(line: str) -> None:
         print(line, flush=True)
@@ -16,6 +16,8 @@ def main() -> None:
     table3_hardware.run(report)
     report("## Softmax emulation wall-time (CPU, jitted)")
     bench_softmax.run(report)
+    report("## Masked decode attention: fused kernel vs unfused vs chunked")
+    bench_decode.run(report)
     report("## Table 1: drop-in inference accuracy (synthetic-GLUE proxy)")
     table1_accuracy.run(report)
     report("## Table 2: training-through-Hyft accuracy (proxy)")

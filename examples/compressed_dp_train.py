@@ -17,6 +17,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import optim
+from repro.distributed.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig, lm_batch
 from repro.models import build_model
@@ -34,7 +35,7 @@ mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
 
 
 def make_step(compress: bool):
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(), P(), P("dp"), P("dp"), P()),
              out_specs=(P(), P(), P()))
     def dp_step(params, opt, tokens, targets, key):

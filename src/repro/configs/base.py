@@ -95,6 +95,9 @@ class TrainConfig:
     seed: int = 0
     checkpoint_every: int = 100
     keep_checkpoints: int = 3
+    # attention-mode override (None = use the model config's attn_mode);
+    # "kernel" trains through the fused Pallas fwd+bwd kernels
+    attn_mode: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +108,9 @@ class ServeConfig:
     cache_dtype: str = "bfloat16"
     seq_parallel: bool = False       # sequence-parallel decode attention
     temperature: float = 0.0
+    # attention-mode override (None = use the model config's attn_mode);
+    # "kernel" keeps masked decode on the fused Pallas kernel
+    attn_mode: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

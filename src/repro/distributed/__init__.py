@@ -1,1 +1,2 @@
 from repro.distributed import fault_tolerance, sharding  # noqa: F401
+from repro.distributed.compat import abstract_mesh, shard_map  # noqa: F401

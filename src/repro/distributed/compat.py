@@ -1,0 +1,26 @@
+"""Version-portable imports/constructors for fast-moving JAX APIs.
+
+One blessed spelling for src *and* tests — when JAX moves or reshapes an
+API, this is the only file that chases it.
+"""
+from __future__ import annotations
+
+try:  # newer JAX exports shard_map at the top level
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # the long-standing experimental home
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def abstract_mesh(shape, axis_names):
+    """Construct ``jax.sharding.AbstractMesh`` across JAX versions.
+
+    Newer JAX takes one ``((name, size), ...)`` shape tuple; older releases
+    took ``(shape, axis_names)``.  Spec math on an AbstractMesh needs no
+    device allocation, so production geometries (16x16, 2x16x16) are
+    testable on a single CPU.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axis_names))

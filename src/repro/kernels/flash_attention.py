@@ -15,9 +15,32 @@ assembly, fixed-point accumulation, and the final log-subtract division.
 The online rescale multiplies by the *Hyft-approximated* exp of the max
 delta (the DIV/MUL unit in rescale duty).
 
-Accumulator pattern: (bh, q, kv) grid with kv innermost; output blocks and
-the (m, l) stat blocks map to the same index for every kv step, so they stay
-resident in VMEM and serve as carry; finalization happens at the last step.
+Forward accumulator pattern: (bh, q, kv) grid with kv innermost; output
+blocks and the (m, l) stat blocks map to the same index for every kv step,
+so they stay resident in VMEM and serve as carry; finalization happens at
+the last step.
+
+Mask contract (DESIGN.md §3): ``kv_len_mask`` is an optional float32
+``(B, Sk)`` array, 1.0 = valid KV position, 0.0 = padded/invalid.  Masking
+happens on the *float scores before FP2FX* (identical to the unfused path):
+invalid scores become ``NEG_BIG``, the converter saturates them to the
+fixed-point minimum and the exponent unit flushes their probability to zero.
+Sequences that are not block multiples are padded automatically and the
+padding is folded into the same mask.
+
+Backward (paper §3.5, training mode): a ``jax.custom_vjp`` whose bwd is two
+Pallas kernels that *recompute* the Hyft probabilities per (q, kv) block
+from the saved final row stats ``(m, l)`` — flash-style, single pass, no
+online rescale — mirroring the arithmetic of ``_cha_bwd`` in
+``repro.models.attention``:
+
+  p  = log_div(exp_unit(fp2fx(z) - m), lod_refloat(l))   # DIV unit reused
+  dv = p^T do;  dp = do v^T;  ds = p (dp - delta);  delta = <do, o>
+  dq = ds k * scale;  dk = ds^T q * scale
+
+The dq kernel runs on a (bh, q, kv) grid with the dq block as carry over kv
+steps; the dk/dv kernel runs on a (bh_kv, kv, group*q) grid with the dk/dv
+blocks as carry over the fused (GQA group x q block) inner dimension.
 """
 from __future__ import annotations
 
@@ -35,9 +58,19 @@ I32 = jnp.int32
 NEG_BIG = -3.0e38  # pre-quantization mask value; FP2FX saturates it to fx lo
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
-                  cfg: HyftConfig, sm_scale: float, causal: bool,
-                  block_q: int, block_k: int, nk: int):
+# --------------------------------------------------------------------------
+# forward kernel
+# --------------------------------------------------------------------------
+
+
+def _flash_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float, causal: bool,
+                      block_q: int, block_k: int, nk: int, q_offset: int,
+                      has_mask: bool):
+    if has_mask:
+        q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref = refs
+        mask_ref = None
     iq, ik = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -52,9 +85,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
     z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=F32) * sm_scale
     if causal:
-        qi = iq * block_q + jax.lax.broadcasted_iota(I32, z.shape, 0)
+        qi = q_offset + iq * block_q + jax.lax.broadcasted_iota(I32, z.shape, 0)
         ki = ik * block_k + jax.lax.broadcasted_iota(I32, z.shape, 1)
         z = jnp.where(qi >= ki, z, NEG_BIG)
+    if has_mask:  # pre-FP2FX, same as the unfused path
+        z = jnp.where(mask_ref[0][None, :] > 0, z, NEG_BIG)
 
     # ---- Hyft stage 1: FP2FX + (strided) block max, merged with running max
     z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
@@ -95,56 +130,322 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
         o_ref[...] = res[None].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "cfg", "sm_scale", "causal", "block_q", "block_k", "interpret", "return_stats"))
-def flash_hyft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                         cfg: HyftConfig, sm_scale: float | None = None,
-                         causal: bool = True, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = True,
-                         return_stats: bool = False):
-    """Fused attention with Hyft softmax.
+def _flash_fwd_impl(q3, k3, v3, maskf, *, cfg: HyftConfig, sm_scale: float,
+                    causal: bool, bq: int, bk: int, group: int,
+                    q_offset: int, interpret: bool):
+    """Blocked forward on pre-padded 3D operands.
 
-    Args:
-      q: (B, Hq, Sq, D);  k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0 (GQA).
-    Returns (B, Hq, Sq, D) in fp32 (callers cast), plus (m, l) row stats when
-    ``return_stats`` (used by the cross-device sequence-parallel combine).
+    q3: (BH, Sq, D); k3/v3: (BHkv, Sk, D); maskf: (B, Sk) float or None.
+    Returns (o (BH,Sq,D) f32, m (BH,Sq) i32 raw, l (BH,Sq) f32).
     """
-    B, Hq, Sq, D = q.shape
-    _, Hkv, Sk, _ = k.shape
-    assert Hq % Hkv == 0
-    group = Hq // Hkv
-    scale = sm_scale if sm_scale is not None else D ** -0.5
-    bq, bk = min(block_q, Sq), min(block_k, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0, "pad sequence to block multiples"
-    q3 = q.reshape(B * Hq, Sq, D)
-    k3 = k.reshape(B * Hkv, Sk, D)
-    v3 = v.reshape(B * Hkv, Sk, D)
+    BH, Sq, D = q3.shape
+    Sk = k3.shape[1]
+    Hq_per_b = BH // max(maskf.shape[0], 1) if maskf is not None else 0
     nq, nk = Sq // bq, Sk // bk
-    grid = (B * Hq, nq, nk)
+    grid = (BH, nq, nk)
+    has_mask = maskf is not None
 
-    kern = functools.partial(_flash_kernel, cfg=cfg, sm_scale=scale,
-                             causal=causal, block_q=bq, block_k=bk, nk=nk)
+    kern = functools.partial(_flash_fwd_kernel, cfg=cfg, sm_scale=sm_scale,
+                             causal=causal, block_q=bq, block_k=bk, nk=nk,
+                             q_offset=q_offset, has_mask=has_mask)
+    in_specs = [
+        pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
+    ]
+    operands = [q3, k3, v3]
+    if has_mask:
+        in_specs.append(
+            pl.BlockSpec((1, bk), lambda b, i, j, h=Hq_per_b: (b // h, j)))
+        operands.append(maskf)
     o, m_st, l_st = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((bq, 128), lambda b, i, j, n=nq: (b * n + i, 0)),
             pl.BlockSpec((bq, 128), lambda b, i, j, n=nq: (b * n + i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B * Hq, Sq, D), F32),
-            jax.ShapeDtypeStruct((B * Hq * Sq, 128), I32),
-            jax.ShapeDtypeStruct((B * Hq * Sq, 128), F32),
+            jax.ShapeDtypeStruct((BH, Sq, D), F32),
+            jax.ShapeDtypeStruct((BH * Sq, 128), I32),
+            jax.ShapeDtypeStruct((BH * Sq, 128), F32),
         ],
         interpret=interpret,
-    )(q3, k3, v3)
-    out = o.reshape(B, Hq, Sq, D)
-    if return_stats:
-        return out, m_st[:, 0].reshape(B, Hq, Sq), l_st[:, 0].reshape(B, Hq, Sq)
-    return out
+    )(*operands)
+    return o, m_st[:, 0].reshape(BH, Sq), l_st[:, 0].reshape(BH, Sq)
+
+
+# --------------------------------------------------------------------------
+# backward kernels (recompute-from-stats, flash-style)
+# --------------------------------------------------------------------------
+
+
+def _recompute_probs(q, k, mask_row, m_row, l_row, *, cfg, sm_scale, causal,
+                     qi0, ki0):
+    """Hyft probabilities of one (bq, bk) tile from the saved final row stats.
+
+    Identical arithmetic to the chunked path's ``probs``: elementwise, so the
+    result is independent of how the forward blocked the KV axis."""
+    z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * sm_scale
+    if causal:
+        qi = qi0 + jax.lax.broadcasted_iota(I32, z.shape, 0)
+        ki = ki0 + jax.lax.broadcasted_iota(I32, z.shape, 1)
+        z = jnp.where(qi >= ki, z, NEG_BIG)
+    if mask_row is not None:
+        z = jnp.where(mask_row[None, :] > 0, z, NEG_BIG)
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    e, m = nm.exp_unit(z_raw - m_row, cfg.frac_bits, cfg.mant_bits)
+    e_b, m_b = nm.lod_refloat(l_row, cfg.mant_bits)
+    return nm.log_div(e, m, e_b, m_b, cfg.mant_bits)
+
+
+def _flash_bwd_dq_kernel(*refs, cfg: HyftConfig, sm_scale: float,
+                         causal: bool, block_q: int, block_k: int,
+                         q_offset: int, has_mask: bool):
+    if has_mask:
+        (q_ref, k_ref, v_ref, do_ref, delta_ref, m_ref, l_ref, mask_ref,
+         dq_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, do_ref, delta_ref, m_ref, l_ref, dq_ref = refs
+        mask_ref = None
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    q = q_ref[0].astype(F32)
+    k = k_ref[0].astype(F32)
+    v = v_ref[0].astype(F32)
+    do = do_ref[0].astype(F32)
+    p = _recompute_probs(
+        q, k, mask_ref[0] if has_mask else None,
+        m_ref[0][:, None], l_ref[0][:, None], cfg=cfg, sm_scale=sm_scale,
+        causal=causal, qi0=q_offset + iq * block_q, ki0=ik * block_k)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)
+    ds = p * (dp - delta_ref[0][:, None])
+    dq = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                             preferred_element_type=F32) * sm_scale
+    dq_ref[...] = dq_ref[...] + dq[None]
+
+
+def _flash_bwd_dkv_kernel(*refs, cfg: HyftConfig, sm_scale: float,
+                          causal: bool, block_q: int, block_k: int,
+                          nq: int, q_offset: int, has_mask: bool):
+    if has_mask:
+        (q_ref, do_ref, delta_ref, m_ref, l_ref, k_ref, v_ref, mask_ref,
+         dk_ref, dv_ref) = refs
+    else:
+        (q_ref, do_ref, delta_ref, m_ref, l_ref, k_ref, v_ref,
+         dk_ref, dv_ref) = refs
+        mask_ref = None
+    ik, it = pl.program_id(1), pl.program_id(2)
+    iq = it % nq  # q-block index inside the fused (group x q-block) axis
+
+    @pl.when(it == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    q = q_ref[0].astype(F32)
+    k = k_ref[0].astype(F32)
+    v = v_ref[0].astype(F32)
+    do = do_ref[0].astype(F32)
+    p = _recompute_probs(
+        q, k, mask_ref[0] if has_mask else None,
+        m_ref[0][:, None], l_ref[0][:, None], cfg=cfg, sm_scale=sm_scale,
+        causal=causal, qi0=q_offset + iq * block_q, ki0=ik * block_k)
+    dv = jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                             preferred_element_type=F32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)
+    ds = p * (dp - delta_ref[0][:, None])
+    dk = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                             preferred_element_type=F32) * sm_scale
+    dk_ref[...] = dk_ref[...] + dk[None]
+    dv_ref[...] = dv_ref[...] + dv[None]
+
+
+def _flash_bwd_impl(q3, k3, v3, maskf, do3, o3, m2, l2, *, cfg, sm_scale,
+                    causal, bq, bk, group, q_offset, interpret, batch):
+    """Backward on pre-padded 3D operands; returns (dq3, dk3, dv3)."""
+    BH, Sq, D = q3.shape
+    BHkv, Sk = k3.shape[0], k3.shape[1]
+    nq, nk = Sq // bq, Sk // bk
+    has_mask = maskf is not None
+    hq_per_b = BH // batch
+    delta = jnp.sum(do3.astype(F32) * o3.astype(F32), axis=-1)  # (BH, Sq)
+
+    # ---- dq: (bh, q, kv) grid, kv innermost, dq block as carry ------------
+    row_spec = pl.BlockSpec((1, bq), lambda b, i, j: (b, i))
+    in_specs = [
+        pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        row_spec, row_spec, row_spec,
+    ]
+    operands = [q3, k3, v3, do3, delta, m2, l2]
+    if has_mask:
+        in_specs.append(
+            pl.BlockSpec((1, bk), lambda b, i, j, h=hq_per_b: (b // h, j)))
+        operands.append(maskf)
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, cfg=cfg, sm_scale=sm_scale,
+                          causal=causal, block_q=bq, block_k=bk,
+                          q_offset=q_offset, has_mask=has_mask),
+        grid=(BH, nq, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), F32),
+        interpret=interpret,
+    )(*operands)
+
+    # ---- dk/dv: (bh_kv, kv, group*q) grid, dk/dv blocks as carry ----------
+    # the fused inner axis t enumerates (GQA group member, q block); index
+    # maps decode it as head = b*group + t // nq, q block = t % nq.
+    qrow3 = pl.BlockSpec(
+        (1, bq, D), lambda b, j, t, g=group, n=nq: (b * g + t // n, t % n, 0))
+    qrow2 = pl.BlockSpec(
+        (1, bq), lambda b, j, t, g=group, n=nq: (b * g + t // n, t % n))
+    in_specs = [
+        qrow3, qrow3, qrow2, qrow2, qrow2,
+        pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),
+    ]
+    operands = [q3, do3, delta, m2, l2, k3, v3]
+    hkv_per_b = BHkv // batch
+    if has_mask:
+        in_specs.append(
+            pl.BlockSpec((1, bk), lambda b, j, t, h=hkv_per_b: (b // h, j)))
+        operands.append(maskf)
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, cfg=cfg, sm_scale=sm_scale,
+                          causal=causal, block_q=bq, block_k=bk, nq=nq,
+                          q_offset=q_offset, has_mask=has_mask),
+        grid=(BHkv, nk, group * nq),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BHkv, Sk, D), F32),
+            jax.ShapeDtypeStruct((BHkv, Sk, D), F32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------------------
+# custom VJP plumbing (operates on pre-padded 4D arrays)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _flash_attn(q, k, v, maskf, cfg, sm_scale, causal, bq, bk, interpret,
+                q_offset):
+    o, _, _ = _flash_fwd_impl(
+        _h3(q), _h3(k), _h3(v), maskf, cfg=cfg, sm_scale=sm_scale,
+        causal=causal, bq=bq, bk=bk, group=q.shape[1] // k.shape[1],
+        q_offset=q_offset, interpret=interpret)
+    return o.reshape(q.shape)
+
+
+def _h3(x):
+    B, H, S, D = x.shape
+    return x.reshape(B * H, S, D)
+
+
+def _flash_attn_fwd(q, k, v, maskf, cfg, sm_scale, causal, bq, bk, interpret,
+                    q_offset):
+    o, m2, l2 = _flash_fwd_impl(
+        _h3(q), _h3(k), _h3(v), maskf, cfg=cfg, sm_scale=sm_scale,
+        causal=causal, bq=bq, bk=bk, group=q.shape[1] // k.shape[1],
+        q_offset=q_offset, interpret=interpret)
+    return o.reshape(q.shape), (q, k, v, maskf, o, m2, l2)
+
+
+def _flash_attn_bwd(cfg, sm_scale, causal, bq, bk, interpret, q_offset,
+                    res, do):
+    q, k, v, maskf, o3, m2, l2 = res
+    dq, dk, dv = _flash_bwd_impl(
+        _h3(q), _h3(k), _h3(v), maskf, _h3(do.astype(F32)), o3, m2, l2,
+        cfg=cfg, sm_scale=sm_scale, causal=causal, bq=bq, bk=bk,
+        group=q.shape[1] // k.shape[1], q_offset=q_offset,
+        interpret=interpret, batch=q.shape[0])
+    dmask = None if maskf is None else jnp.zeros_like(maskf)
+    return (dq.reshape(q.shape).astype(q.dtype),
+            dk.reshape(k.shape).astype(k.dtype),
+            dv.reshape(v.shape).astype(v.dtype), dmask)
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+# --------------------------------------------------------------------------
+# public entry point
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "sm_scale", "causal", "block_q", "block_k", "interpret",
+    "return_stats", "q_offset"))
+def flash_hyft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cfg: HyftConfig, sm_scale: float | None = None,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = True,
+                         return_stats: bool = False,
+                         kv_len_mask: jax.Array | None = None,
+                         q_offset: int = 0):
+    """Fused attention with Hyft softmax — trainable and mask-aware.
+
+    Args:
+      q: (B, Hq, Sq, D);  k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0 (GQA).
+      kv_len_mask: optional (B, Sk) validity mask (bool or float, nonzero =
+        valid) — the decode/serving cache mask.  Applied pre-FP2FX exactly
+        like the unfused path.
+      q_offset: static int added to query positions for the causal mask
+        (partial-prefill continuation).
+    Returns (B, Hq, Sq, D) in fp32 (callers cast).  Differentiable: the VJP
+    runs the fused Pallas backward kernels (recompute from the saved (m, l)
+    row stats through the reused DIV/MUL datapath).  With ``return_stats``
+    also returns the (m, l) row stats (forward-only; used by the
+    cross-device sequence-parallel combine).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pad_q, pad_k = (-Sq) % bq, (-Sk) % bk
+    maskf = None
+    if kv_len_mask is not None:
+        maskf = kv_len_mask.astype(F32)
+    elif pad_k:
+        maskf = jnp.ones((B, Sk), F32)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        maskf = jnp.pad(maskf, ((0, 0), (0, pad_k)))
+
+    if return_stats:  # forward-only path (sequence-parallel combine)
+        o, m2, l2 = _flash_fwd_impl(
+            _h3(q), _h3(k), _h3(v), maskf, cfg=cfg, sm_scale=scale,
+            causal=causal, bq=bq, bk=bk, group=Hq // Hkv,
+            q_offset=q_offset, interpret=interpret)
+        o = o.reshape(q.shape)[:, :, :Sq]
+        m2 = m2.reshape(B, Hq, -1)[:, :, :Sq]
+        l2 = l2.reshape(B, Hq, -1)[:, :, :Sq]
+        return o, m2, l2
+
+    out = _flash_attn(q, k, v, maskf, cfg, scale, causal, bq, bk, interpret,
+                      q_offset)
+    return out[:, :, :Sq]

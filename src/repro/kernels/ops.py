@@ -1,31 +1,54 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels + the attention contract.
 
 ``interpret`` defaults to auto: compiled on TPU, interpreter elsewhere (this
 container is CPU-only; TPU is the lowering target).  ``hyft_softmax`` is
 differentiable — its VJP is the backward *kernel* (the accelerator's reused
 DIV/MUL datapath), mirroring ``repro.core.hyft.hyft_softmax``.
+
+Mask/stats contract (DESIGN.md §3) — shared by all three attention modes
+(``unfused`` / ``chunked`` / ``kernel``):
+
+  * ``kv_len_mask``: optional per-batch KV validity mask of shape (B, Sk);
+    bool or float, nonzero = valid.  Masking is applied to the *float scores
+    before FP2FX* so invalid positions saturate to the fixed-point minimum
+    and their Hyft probability flushes to zero.  ``as_mask_f`` normalizes it
+    to float32 once, at the dispatch boundary, so the differentiable paths
+    (custom_vjp) see a float-typed side input with a well-defined zero
+    cotangent.
+  * ``q_offset``: static int added to query positions for the causal mask.
+  * row stats: every online mode carries per-row ``(m, l)`` — the int32
+    fixed-point running max and the fp32 fixed-point probability sum — and
+    the fused kernel saves exactly these as its backward residuals
+    (``return_stats`` exposes them for the cross-device combine).
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.hyft import HyftConfig
 from repro.kernels import hyft_softmax as _hk
 from repro.kernels.flash_attention import flash_hyft_attention  # noqa: F401
+
+F32 = jnp.float32
 
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def as_mask_f(kv_len_mask) -> jax.Array | None:
+    """Normalize a KV validity mask (bool/int/float or None) to float32."""
+    if kv_len_mask is None:
+        return None
+    return kv_len_mask.astype(F32)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(1,))
 def hyft_softmax(z: jax.Array, cfg: HyftConfig) -> jax.Array:
     return _hk.hyft_softmax_fwd_kernel(z, cfg, interpret=_auto_interpret())
-
-
-import jax.numpy as jnp
 
 
 def _fwd(z, cfg):
@@ -43,8 +66,17 @@ hyft_softmax.defvjp(_fwd, _bwd)
 
 
 def hyft_attention(q, k, v, cfg: HyftConfig, sm_scale=None, causal=True,
-                   block_q=128, block_k=128):
-    """Fused flash attention with Hyft softmax (forward; serving/prefill)."""
+                   block_q=128, block_k=128, kv_len_mask=None, q_offset=0,
+                   return_stats=False):
+    """Fused flash attention with Hyft softmax — trainable and mask-aware.
+
+    The production ``attn_mode="kernel"`` path for prefill, decode (pass the
+    cache validity mask as ``kv_len_mask``) and training (differentiable via
+    the fused Pallas backward kernels).
+    """
     return flash_hyft_attention(q, k, v, cfg, sm_scale=sm_scale, causal=causal,
                                 block_q=block_q, block_k=block_k,
-                                interpret=_auto_interpret())
+                                interpret=_auto_interpret(),
+                                return_stats=return_stats,
+                                kv_len_mask=as_mask_f(kv_len_mask),
+                                q_offset=q_offset)

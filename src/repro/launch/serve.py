@@ -11,6 +11,9 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--softmax", default="hyft16")
+    ap.add_argument("--attn-mode", default=None,
+                    choices=["unfused", "chunked", "kernel"],
+                    help="attention path; 'kernel' = fused Pallas decode")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prefill", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -41,7 +44,8 @@ def main():
             key, (args.batch, cfg.frontend_len, cfg.frontend_dim))
     scfg = ServeConfig(batch=args.batch, prefill_len=args.prefill,
                        max_len=args.prefill + args.max_new + 1,
-                       cache_dtype="float32", temperature=args.temperature)
+                       cache_dtype="float32", temperature=args.temperature,
+                       attn_mode=args.attn_mode)
     out = generate(model, params, batch, scfg, max_new=args.max_new)
     for i, row in enumerate(out.tolist()):
         print(f"[{i}] {row}")

@@ -19,6 +19,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--softmax", default="hyft16")
+    ap.add_argument("--attn-mode", default=None,
+                    choices=["unfused", "chunked", "kernel"],
+                    help="attention path; 'kernel' = fused Pallas fwd+bwd")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -53,7 +56,7 @@ def main():
     tcfg = TrainConfig(global_batch=args.global_batch, seq_len=args.seq,
                        microbatch=args.microbatch, lr=args.lr,
                        total_steps=args.steps, remat=args.remat,
-                       optimizer=args.optimizer)
+                       optimizer=args.optimizer, attn_mode=args.attn_mode)
     ocfg = optim.OptConfig(name=args.optimizer, lr=args.lr)
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.global_batch, seed=args.seed)

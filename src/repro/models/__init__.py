@@ -6,7 +6,7 @@ Lazy re-exports to avoid a circular import with distributed.sharding
 
 
 def __getattr__(name):
-    if name in ("Model", "build_model"):
+    if name in ("Model", "build_model", "resolve_attn_mode"):
         from repro.models import model_zoo
         return getattr(model_zoo, name)
     raise AttributeError(name)

@@ -132,7 +132,15 @@ def _hyft_finalize(acc, l_run, cfg: HyftConfig):
     return jnp.where(acc == 0.0, 0.0, res)
 
 
-def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset):
+def _mask_chunks(kv_len_mask, B, nk, chunk):
+    """(B, Sk) float mask -> (nk, B, chunk) scan slices, or None."""
+    if kv_len_mask is None:
+        return None
+    return kv_len_mask.reshape(B, nk, chunk).transpose(1, 0, 2)
+
+
+def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset,
+                 kv_len_mask=None):
     """Returns (o, m_final raw, l_final). Shapes: q (B,Hq,Sq,D), k/v GQA."""
     B, Hq, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
@@ -141,15 +149,18 @@ def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset):
     qg = q.reshape(B, Hkv, g, Sq, D).astype(F32) * (D ** -0.5)
     kc = k.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
     vc = v.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
+    mc = _mask_chunks(kv_len_mask, B, nk, chunk)
 
     def body(carry, xs):
         m_run, l_run, acc = carry
-        j, kt, vt = xs
+        j, kt, vt, mt = xs
         z = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kt)
         if causal:
             qi = q_offset + jax.lax.broadcasted_iota(I32, (Sq, chunk), 0)
             ki = jax.lax.broadcasted_iota(I32, (Sq, chunk), 1) + j * chunk
             z = jnp.where((qi >= ki)[None, None, None], z, NEG_BIG)
+        if mt is not None:  # pre-FP2FX, same as the unfused path
+            z = jnp.where(mt[:, None, None, None, :] > 0, z, NEG_BIG)
         m_new, alpha, l_blk, p = _hyft_chunk_stats(z, cfg, m_run)
         l_run = nm.fx_quantize(l_run * alpha, cfg.acc_bits) + l_blk
         acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vt)
@@ -159,22 +170,28 @@ def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset):
     l0 = jnp.zeros((B, Hkv, g, Sq, 1), F32)
     a0 = jnp.zeros((B, Hkv, g, Sq, D), F32)
     (m_f, l_f, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        body, (m0, l0, a0), (jnp.arange(nk), kc, vc, mc))
     o = _hyft_finalize(acc, l_f, cfg).reshape(B, Hq, Sq, D)
     return o, m_f, l_f
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def chunked_hyft_attention(q, k, v, cfg: HyftConfig, causal: bool = True,
-                           chunk: int = 512, q_offset: int = 0):
-    """Online-Hyft attention, O(chunk) memory in the KV dimension."""
-    o, _, _ = _chunked_fwd(q, k, v, cfg, causal, chunk, q_offset)
+                           chunk: int = 512, q_offset: int = 0,
+                           kv_len_mask=None):
+    """Online-Hyft attention, O(chunk) memory in the KV dimension.
+
+    ``kv_len_mask``: optional (B, Sk) float validity mask (nonzero = valid),
+    per the shared mask contract in ``repro.kernels.ops``.
+    """
+    o, _, _ = _chunked_fwd(q, k, v, cfg, causal, chunk, q_offset, kv_len_mask)
     return o.astype(q.dtype)
 
 
-def _cha_fwd(q, k, v, cfg, causal, chunk, q_offset):
-    o, m_f, l_f = _chunked_fwd(q, k, v, cfg, causal, chunk, q_offset)
-    return o.astype(q.dtype), (q, k, v, o, m_f, l_f)
+def _cha_fwd(q, k, v, cfg, causal, chunk, q_offset, kv_len_mask=None):
+    o, m_f, l_f = _chunked_fwd(q, k, v, cfg, causal, chunk, q_offset,
+                               kv_len_mask)
+    return o.astype(q.dtype), (q, k, v, kv_len_mask, o, m_f, l_f)
 
 
 def _cha_bwd(cfg, causal, chunk, q_offset, res, do):
@@ -182,7 +199,7 @@ def _cha_bwd(cfg, causal, chunk, q_offset, res, do):
     row stats (single-pass, no online rescale), then the standard softmax
     attention gradients.  The softmax-VJP identity is applied to the *Hyft*
     probabilities — the paper's training mode, matrix-free."""
-    q, k, v, o, m_f, l_f = res
+    q, k, v, kv_len_mask, o, m_f, l_f = res
     B, Hq, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -196,20 +213,23 @@ def _cha_bwd(cfg, causal, chunk, q_offset, res, do):
 
     kc = k.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
     vc = v.reshape(B, Hkv, nk, chunk, D).transpose(2, 0, 1, 3, 4).astype(F32)
+    mc = _mask_chunks(kv_len_mask, B, nk, chunk)
 
-    def probs(j, kt):
+    def probs(j, kt, mt):
         z = jnp.einsum("bhgqd,bhkd->bhgqk", qg * scale, kt)
         if causal:
             qi = q_offset + jax.lax.broadcasted_iota(I32, (Sq, chunk), 0)
             ki = jax.lax.broadcasted_iota(I32, (Sq, chunk), 1) + j * chunk
             z = jnp.where((qi >= ki)[None, None, None], z, NEG_BIG)
+        if mt is not None:
+            z = jnp.where(mt[:, None, None, None, :] > 0, z, NEG_BIG)
         z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
         e, m = nm.exp_unit(z_raw - m_f, cfg.frac_bits, cfg.mant_bits)
         return nm.log_div(e, m, e_b, m_b, cfg.mant_bits)  # broadcast over chunk
 
     def body(dq, xs):
-        j, kt, vt = xs
-        p = probs(j, kt)  # (B,Hkv,g,Sq,chunk)
+        j, kt, vt, mt = xs
+        p = probs(j, kt, mt)  # (B,Hkv,g,Sq,chunk)
         dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
         dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vt)
         ds = p * (dp - delta)
@@ -218,11 +238,12 @@ def _cha_bwd(cfg, causal, chunk, q_offset, res, do):
         return dq, (dk, dv)
 
     dq0 = jnp.zeros((B, Hkv, g, Sq, D), F32)
-    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nk), kc, vc))
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nk), kc, vc, mc))
     dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Sk, D)
     dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Sk, D)
+    dmask = None if kv_len_mask is None else jnp.zeros_like(kv_len_mask)
     return (dq.reshape(B, Hq, Sq, D).astype(q.dtype), dk.astype(k.dtype),
-            dv.astype(v.dtype))
+            dv.astype(v.dtype), dmask)
 
 
 chunked_hyft_attention.defvjp(_cha_fwd, _cha_bwd)
@@ -234,16 +255,29 @@ chunked_hyft_attention.defvjp(_cha_fwd, _cha_bwd)
 
 
 def attention_fwd(q, k, v, cfg, *, causal=True, q_offset=0, kv_len_mask=None):
-    """Dispatch on cfg.attn_mode; falls back to unfused for non-Hyft impls."""
+    """Dispatch on cfg.attn_mode; falls back to unfused for non-Hyft impls.
+
+    All three modes honor the shared mask contract (``repro.kernels.ops``):
+    ``kv_len_mask`` (B, Sk) marks valid KV positions, so decode and serving
+    stay on the fused/online paths instead of dropping to unfused.  The only
+    remaining fallbacks are non-Hyft softmax impls, a traced ``q_offset``
+    (the fused paths need it static for the causal mask), and a KV length
+    the chunk size doesn't divide (chunked mode only).
+    """
     hcfg = hyft_config_for(cfg.softmax_impl)
     mode = getattr(cfg, "attn_mode", "unfused")
-    if mode == "chunked" and hcfg is not None and kv_len_mask is None:
-        chunk = min(getattr(cfg, "attn_chunk", 512), k.shape[2])
-        if k.shape[2] % chunk == 0:
-            return chunked_hyft_attention(q, k, v, hcfg, causal, chunk, q_offset)
-    if mode == "kernel" and hcfg is not None and kv_len_mask is None:
+    if hcfg is not None and isinstance(q_offset, int):
         from repro.kernels import ops
-        return ops.hyft_attention(q, k, v, hcfg, causal=causal).astype(q.dtype)
+        maskf = ops.as_mask_f(kv_len_mask)
+        if mode == "chunked":
+            chunk = min(getattr(cfg, "attn_chunk", 512), k.shape[2])
+            if k.shape[2] % chunk == 0:
+                return chunked_hyft_attention(q, k, v, hcfg, causal, chunk,
+                                              q_offset, maskf)
+        if mode == "kernel":
+            return ops.hyft_attention(
+                q, k, v, hcfg, causal=causal, q_offset=q_offset,
+                kv_len_mask=maskf).astype(q.dtype)
     return unfused_attention(q, k, v, cfg.softmax_impl, causal=causal,
                              q_offset=q_offset, kv_len_mask=kv_len_mask)
 

@@ -95,7 +95,7 @@ def decode_train(params, tokens, memory, cfg, remat="full"):
         h = norm_fn(lp["norms"]["pre_cross"], x_c)
         q, k, v = attn.qkv_proj(lp["cross"], h, memory.astype(h.dtype), cfg,
                                 positions, mem_pos)
-        o = attn.unfused_attention(q, k, v, cfg.softmax_impl, causal=False)
+        o = attn.attention_fwd(q, k, v, cfg, causal=False)
         x_c = x_c + attn.out_proj(lp["cross"], o.astype(x_c.dtype))
         h = norm_fn(lp["norms"]["pre_mlp"], x_c)
         return x_c + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(x_c.dtype)
@@ -143,7 +143,7 @@ def prefill_parallel(params, cache, batch, cfg):
         y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
         h = norm_fn(lp["norms"]["pre_cross"], y)
         q, k, v = attn.qkv_proj(lp["cross"], h, mem_c, cfg, positions, mem_pos)
-        o = attn.unfused_attention(q, k, v, cfg.softmax_impl, causal=False)
+        o = attn.attention_fwd(q, k, v, cfg, causal=False)
         y = y + attn.out_proj(lp["cross"], o.astype(y.dtype))
         h = norm_fn(lp["norms"]["pre_mlp"], y)
         return y + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(y.dtype), nc
@@ -180,12 +180,12 @@ def decode_step(params, cache, tokens1, pos, cfg):
         h = norm_fn(lp["norms"]["pre_attn"], carry)
         q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
         nc = attn.cache_update(lc, k, v, pos)
-        o = attn.unfused_attention(q, nc["k"], nc["v"], cfg.softmax_impl,
-                                   causal=False, kv_len_mask=kv_mask)
+        o = attn.attention_fwd(q, nc["k"], nc["v"], cfg, causal=False,
+                               kv_len_mask=kv_mask)
         y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
         h = norm_fn(lp["norms"]["pre_cross"], y)
         q, k, v = attn.qkv_proj(lp["cross"], h, memory, cfg, positions, mem_pos)
-        o = attn.unfused_attention(q, k, v, cfg.softmax_impl, causal=False)
+        o = attn.attention_fwd(q, k, v, cfg, causal=False)
         y = y + attn.out_proj(lp["cross"], o.astype(y.dtype))
         h = norm_fn(lp["norms"]["pre_mlp"], y)
         return y + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(y.dtype), nc

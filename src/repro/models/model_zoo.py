@@ -28,6 +28,16 @@ class Model:
     init_cache: Callable
 
 
+def resolve_attn_mode(model: Model, attn_mode) -> Model:
+    """Rebuild the model with an attention-mode override (no-op when the
+    override is unset or already active).  ``attn_mode="kernel"`` keeps
+    prefill, masked decode, and the training backward on the fused Pallas
+    path (the mask/stats contract in ``repro.kernels.ops``)."""
+    if attn_mode and attn_mode != model.cfg.attn_mode:
+        model = build_model(model.cfg.with_(attn_mode=attn_mode))
+    return model
+
+
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.family == "encdec":
         return Model(

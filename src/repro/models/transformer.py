@@ -58,9 +58,10 @@ def _block_apply(p, x, cfg, positions, *, causal=True, decode_cache=None,
     q, k, v = attn.qkv_proj(p["attn"], h, h, cfg, positions, positions)
     if decode_cache is not None:
         cache = attn.cache_update(decode_cache, k, v, pos_offset)
-        o = attn.unfused_attention(
-            q, cache["k"], cache["v"], cfg.softmax_impl, causal=False,
-            kv_len_mask=kv_len_mask)
+        # masked decode goes through the mode dispatch: with
+        # attn_mode="kernel" this stays on the fused Pallas path
+        o = attn.attention_fwd(q, cache["k"], cache["v"], cfg, causal=False,
+                               kv_len_mask=kv_len_mask)
     else:
         cache = None
         o = attn.attention_fwd(q, k, v, cfg, causal=causal)

@@ -29,6 +29,8 @@ def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
              key=None):
     """Prefill the prompt then decode ``max_new`` tokens. Returns (B, max_new)."""
     key = key if key is not None else jax.random.PRNGKey(0)
+    from repro.models import resolve_attn_mode
+    model = resolve_attn_mode(model, scfg.attn_mode)
     B = batch["tokens"].shape[0]
     cache = model.init_cache(params, B, scfg.max_len, jnp.dtype(scfg.cache_dtype))
     logits, cache, pos = model.prefill(params, cache, batch)

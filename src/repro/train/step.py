@@ -23,6 +23,11 @@ F32 = jnp.float32
 
 
 def make_loss_fn(model, tcfg: TrainConfig):
+    # attention-mode override: "kernel" trains through the fused Pallas
+    # fwd+bwd kernels (custom_vjp on flash_hyft_attention)
+    from repro.models import resolve_attn_mode
+    model = resolve_attn_mode(model, getattr(tcfg, "attn_mode", None))
+
     def loss_fn(params, batch):
         return model.loss(params, batch, remat=tcfg.remat, z_loss=tcfg.z_loss,
                           moe_aux_weight=tcfg.moe_aux_weight)

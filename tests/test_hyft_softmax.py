@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests degrade gracefully
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hyft import (HYFT16, HYFT16B, HYFT32, HyftConfig, hyft_jacobian,

@@ -11,6 +11,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade gracefully
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hyft import HyftConfig, hyft_softmax_bwd, hyft_softmax_fwd

@@ -6,15 +6,16 @@ device (no device allocation happens for spec math).
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED, get_config
 from repro.distributed import sharding as shd
+from repro.distributed.compat import abstract_mesh
 from repro.models import build_model
 from repro.models.layers import is_param
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_spec_for_axes_basic():

@@ -215,11 +215,12 @@ class TestCompression:
     def test_compressed_psum_tree_axis1(self):
         from functools import partial
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed.compat import shard_map
         from repro.optim.compression import compressed_psum_tree
         mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
         tree = {"g": jnp.linspace(-1, 1, 16)}
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P())
+        @partial(shard_map, mesh=mesh, in_specs=P(), out_specs=P())
         def f(t):
             return compressed_psum_tree(t, "dp", jax.random.PRNGKey(0))
         out = f(tree)

@@ -95,6 +95,7 @@ def test_sp_decode_attention_matches_single_device():
     from functools import partial
     from jax.sharding import Mesh, PartitionSpec as P
     from repro.core.hyft import HYFT32
+    from repro.distributed.compat import shard_map
     from repro.models.attention import sp_decode_attention, unfused_attention
 
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -106,7 +107,7 @@ def test_sp_decode_attention_matches_single_device():
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
                        P(None, "model")),
              out_specs=P())
