@@ -1,14 +1,21 @@
-"""Masked decode-attention latency: fused kernel vs unfused vs chunked.
+"""Decode benchmarks: attention-op latency + end-to-end decode throughput.
 
-The serving scenario the fused path exists for: one query row per sequence
-(Sq=1) against a padded KV cache with a per-batch validity mask.  All three
-modes honor the shared mask contract (repro.kernels.ops), so this is an
-apples-to-apples latency comparison of the same masked computation.
+Two sections, both emitted as text lines via ``report`` AND returned as a
+dict (``benchmarks/run.py`` and the ``__main__`` entry persist it to
+``BENCH_decode.json``):
 
-Absolute numbers are CPU times (the Pallas kernel runs in interpreter mode
-here; on TPU it is the compiled path), so read the *relative* trend and the
-fact that the fused path no longer falls back to unfused when a mask is
-present — the regression this benchmark guards.
+  op  — masked Sq=1 decode attention across the modes: unfused, chunked,
+        monolithic fused kernel, split-K decode kernel, and split-K over the
+        fp2fx8-quantized (int8 + per-head scale) KV cache.  The Sk=2048
+        masked shape is the acceptance case the split-K kernel must handle
+        without falling back.
+  e2e — ``serve.engine.generate`` tokens/sec on a tiny model: the per-token
+        host dispatch loop vs the on-device ``lax.scan`` loop, dense vs
+        fp2fx8 cache.  This measures exactly what the scanned loop exists
+        for: killing the per-token Python round-trip.
+
+Absolute numbers are CPU times (Pallas in interpreter mode; on TPU it is the
+compiled path) — read the relative trends.
 """
 from __future__ import annotations
 
@@ -19,10 +26,11 @@ import jax.numpy as jnp
 
 from repro.core.hyft import HYFT32
 from repro.kernels import ops
-from repro.models.attention import chunked_hyft_attention, unfused_attention
+from repro.models.attention import (chunked_hyft_attention, fp2fx8_quantize,
+                                    unfused_attention)
 
 F32 = jnp.float32
-SHAPES = [  # (B, Hq, Hkv, Sk, D, valid_len)
+OP_SHAPES = [  # (B, Hq, Hkv, Sk, D, valid_len)
     (4, 8, 4, 512, 64, 300),
     (1, 16, 8, 2048, 64, 1500),
 ]
@@ -37,28 +45,101 @@ def _time(fn, *args, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(report):
+def _op_section(report, shapes, iters):
+    rows = []
     key = jax.random.PRNGKey(0)
-    for B, Hq, Hkv, Sk, D, valid in SHAPES:
+    for B, Hq, Hkv, Sk, D, valid in shapes:
         ks = jax.random.split(key, 3)
         q = jax.random.normal(ks[0], (B, Hq, 1, D), F32)
         k = jax.random.normal(ks[1], (B, Hkv, Sk, D), F32)
         v = jax.random.normal(ks[2], (B, Hkv, Sk, D), F32)
         mask = (jnp.arange(Sk)[None, :] < valid).astype(F32).repeat(B, 0)
+        kr, ksc = fp2fx8_quantize(k)
+        vr, vsc = fp2fx8_quantize(v)
 
-        unfused = jax.jit(lambda q, k, v, m: unfused_attention(
-            q, k, v, "hyft32", causal=False, kv_len_mask=m > 0))
-        fused = jax.jit(lambda q, k, v, m: ops.hyft_attention(
-            q, k, v, HYFT32, causal=False, kv_len_mask=m))
-        chunked = jax.jit(lambda q, k, v, m: chunked_hyft_attention(
-            q, k, v, HYFT32, False, min(512, Sk), 0, m))
-
+        modes = {
+            "unfused": jax.jit(lambda q, k, v, m: unfused_attention(
+                q, k, v, "hyft32", causal=False, kv_len_mask=m > 0)),
+            "kernel": jax.jit(lambda q, k, v, m: ops.hyft_attention(
+                q, k, v, HYFT32, causal=False, kv_len_mask=m)),
+            "chunked": jax.jit(lambda q, k, v, m: chunked_hyft_attention(
+                q, k, v, HYFT32, False, min(512, Sk), 0, m)),
+            "splitk": jax.jit(lambda q, k, v, m: ops.hyft_decode_attention(
+                q, k, v, HYFT32, kv_len_mask=m)),
+            "splitk_fp2fx8": jax.jit(
+                lambda q, kr, vr, m, ksc=ksc, vsc=vsc:
+                ops.hyft_decode_attention(q, kr, vr, HYFT32, kv_len_mask=m,
+                                          k_scale=ksc, v_scale=vsc)),
+        }
         shape = f"B{B}xH{Hq}xS{Sk}(valid={valid})xD{D}"
-        us_u = _time(unfused, q, k, v, mask)
-        us_f = _time(fused, q, k, v, mask)
-        us_c = _time(chunked, q, k, v, mask)
-        report(f"bench_decode,unfused,shape={shape},us_per_step={us_u:.1f}")
-        report(f"bench_decode,kernel,shape={shape},us_per_step={us_f:.1f},"
-               f"vs_unfused={us_f / us_u:.2f}")
-        report(f"bench_decode,chunked,shape={shape},us_per_step={us_c:.1f},"
-               f"vs_unfused={us_c / us_u:.2f}")
+        base = None
+        for name, fn in modes.items():
+            args = (q, kr, vr, mask) if name == "splitk_fp2fx8" else (q, k, v, mask)
+            us = _time(fn, *args, iters=iters)
+            base = us if name == "unfused" else base
+            rows.append({"mode": name, "shape": shape, "us_per_step": us,
+                         "vs_unfused": us / base})
+            report(f"bench_decode,{name},shape={shape},us_per_step={us:.1f},"
+                   f"vs_unfused={us / base:.2f}")
+    return rows
+
+
+def _e2e_section(report, max_new, batch):
+    from repro.configs import get_config, smoke_config
+    from repro.configs.base import ServeConfig
+    from repro.models import build_model
+    from repro.models.layers import unbox
+    from repro.serve.engine import generate
+
+    cfg = smoke_config(get_config("olmo-1b")).with_(
+        softmax_impl="hyft16", vocab=128, n_layers=2)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (batch, 8), 0,
+                                cfg.vocab, jnp.int32)
+    b = {"tokens": tokens}
+
+    rows = []
+    for loop, cache_dtype in (("host", "float32"), ("scan", "float32"),
+                              ("scan", "fp2fx8")):
+        scfg = ServeConfig(max_len=8 + max_new + 1, cache_dtype=cache_dtype,
+                           decode_loop=loop)
+        out = generate(model, params, b, scfg, max_new=max_new)  # compile
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = generate(model, params, b, scfg, max_new=max_new)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        tps = batch * max_new / dt
+        rows.append({"loop": loop, "cache": cache_dtype,
+                     "tokens_per_s": tps,
+                     "us_per_token": dt / (batch * max_new) * 1e6})
+        report(f"bench_decode_e2e,loop={loop},cache={cache_dtype},"
+               f"tokens_per_s={tps:.1f},us_per_token={dt / (batch * max_new) * 1e6:.1f}")
+    return rows
+
+
+def run(report, quick: bool = False):
+    """Run both sections; returns the machine-readable results dict."""
+    shapes = OP_SHAPES[1:] if quick else OP_SHAPES  # keep the Sk=2048 case
+    results = {
+        "op": _op_section(report, shapes, iters=3 if quick else 10),
+        "e2e": _e2e_section(report, max_new=16 if quick else 32,
+                            batch=2 if quick else 4),
+    }
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_decode.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer iters, Sk=2048 op shape only")
+    args = ap.parse_args()
+    res = run(print, quick=args.quick)
+    with open(args.json, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# wrote {args.json}")

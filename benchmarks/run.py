@@ -1,4 +1,5 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import json
 import sys
 import time
 
@@ -16,8 +17,11 @@ def main() -> None:
     table3_hardware.run(report)
     report("## Softmax emulation wall-time (CPU, jitted)")
     bench_softmax.run(report)
-    report("## Masked decode attention: fused kernel vs unfused vs chunked")
-    bench_decode.run(report)
+    report("## Decode: op latency (incl. split-K / fp2fx8) + e2e throughput")
+    decode_results = bench_decode.run(report)
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(decode_results, f, indent=2)
+    report("# wrote BENCH_decode.json")
     report("## Table 1: drop-in inference accuracy (synthetic-GLUE proxy)")
     table1_accuracy.run(report)
     report("## Table 2: training-through-Hyft accuracy (proxy)")

@@ -105,12 +105,17 @@ class ServeConfig:
     batch: int = 8
     prefill_len: int = 128
     max_len: int = 256
+    # KV-cache storage: any jnp dtype name, or "fp2fx8" = int8 FP2FX raws +
+    # per-(head, position) fp32 scale (dequant fused into the decode kernel)
     cache_dtype: str = "bfloat16"
     seq_parallel: bool = False       # sequence-parallel decode attention
     temperature: float = 0.0
     # attention-mode override (None = use the model config's attn_mode);
-    # "kernel" keeps masked decode on the fused Pallas kernel
+    # "kernel" keeps masked decode on the fused (split-K) Pallas kernel
     attn_mode: Optional[str] = None
+    # decode loop: "scan" = one jitted on-device lax.scan (donated cache,
+    # sampling in the loop); "host" = per-token jitted steps (debug fallback)
+    decode_loop: str = "scan"
 
 
 @dataclasses.dataclass(frozen=True)

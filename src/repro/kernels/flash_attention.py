@@ -58,6 +58,29 @@ I32 = jnp.int32
 NEG_BIG = -3.0e38  # pre-quantization mask value; FP2FX saturates it to fx lo
 
 
+def hyft_finalize(acc, l, cfg: HyftConfig):
+    """Hyft stage 3: log-subtract division ``acc / l`` through the DIV unit.
+
+    acc: (..., D) fp32 PV accumulator; l: (..., 1) fp32 fixed-point sum.
+    Shared by the fused kernels' last step, the chunked path, the
+    sequence-parallel combine, and the split-K decode combine — one
+    arithmetic, so every online mode finalizes identically.
+    """
+    e_b, m_b = nm.lod_refloat(l, cfg.mant_bits)
+    sg, e_n, m_n = nm.float_fields(acc, cfg.mant_bits)
+    res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
+    res = jnp.where(sg == 1, -res, res)
+    return jnp.where(acc == 0.0, 0.0, res)
+
+
+def hyft_alpha(d_raw, cfg: HyftConfig):
+    """Hyft-approximated ``exp(d)`` of a fixed-point max delta (d <= 0),
+    assembled to fp32 — the DIV/MUL unit in rescale duty (online merges)."""
+    e_a, m_a = nm.exp_unit(d_raw, cfg.frac_bits, cfg.mant_bits)
+    return ((1 << cfg.mant_bits) + m_a).astype(F32) * nm.pow2_float(
+        e_a - cfg.mant_bits)
+
+
 # --------------------------------------------------------------------------
 # forward kernel
 # --------------------------------------------------------------------------
@@ -104,8 +127,7 @@ def _flash_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float, causal: bool,
     l_blk = jnp.sum(addend, axis=-1, keepdims=True)
 
     # online rescale of the carried sum/acc by the *Hyft* exp of the max delta
-    e_a, m_a = nm.exp_unit(m_old - m_new, cfg.frac_bits, cfg.mant_bits)
-    alpha = ((1 << cfg.mant_bits) + m_a).astype(F32) * nm.pow2_float(e_a - cfg.mant_bits)
+    alpha = hyft_alpha(m_old - m_new, cfg)
     l_new = nm.fx_quantize(l_ref[:, :1] * alpha, cfg.acc_bits) + l_blk
 
     # ---- probabilities as assembled floats -> MXU matmul with V
@@ -121,12 +143,7 @@ def _flash_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float, causal: bool,
     # ---- Hyft stage 3: log-subtract division at the last kv step
     @pl.when(ik == nk - 1)
     def _finalize():
-        e_b, m_b = nm.lod_refloat(l_ref[:, :1], cfg.mant_bits)
-        num = o_ref[0].astype(F32)
-        sg, e_n, m_n = nm.float_fields(num, cfg.mant_bits)
-        res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
-        res = jnp.where(sg == 1, -res, res)
-        res = jnp.where(num == 0.0, 0.0, res)
+        res = hyft_finalize(o_ref[0].astype(F32), l_ref[:, :1], cfg)
         o_ref[...] = res[None].astype(o_ref.dtype)
 
 
@@ -449,3 +466,143 @@ def flash_hyft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out = _flash_attn(q, k, v, maskf, cfg, scale, causal, bq, bk, interpret,
                       q_offset)
     return out[:, :, :Sq]
+
+
+# --------------------------------------------------------------------------
+# split-K decode kernel (Sq = 1)
+# --------------------------------------------------------------------------
+#
+# Decode streams the whole KV cache past a single query row, so the monolithic
+# kernel's (bh, q, kv) grid degenerates to one q block of one row.  The decode
+# kernel instead (a) folds the GQA group into the tile's row dimension — the
+# group's queries share each K/V block load — and (b) splits the KV axis
+# across the grid, each split emitting *local* Hyft (max, fixed-sum, acc)
+# stats.  The cross-split combine is the paper's L1/L2 tree exactly as
+# ``sp_decode_attention`` applies it across devices: integer max over split
+# maxima, per-split rescale by the Hyft-approximated exp of the max delta,
+# fixed-point sum merge, one ``lod_refloat`` + ``log_div`` finalize.
+#
+# K/V may arrive FP2FX-quantized (int8 raw + per-(head, position) scale, the
+# fp2fx8 KV-cache layout in ``repro.models.attention``); dequantization is
+# fused into the kernel's K/V loads so the HBM traffic stays int8.
+
+
+def _decode_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float,
+                       quantized: bool):
+    if quantized:
+        q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref = refs
+    q = q_ref[0].astype(F32)              # (gp, dh) — GQA group as rows
+    k = k_ref[0].astype(F32)              # (bk, dh)
+    v = v_ref[0].astype(F32)
+    if quantized:                         # dequant fused into the load
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
+    z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * sm_scale
+    z = jnp.where(mask_ref[0][None, :] > 0, z, NEG_BIG)
+
+    # ---- L1: local Hyft stages 1-2 against the split-local max
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
+    m_loc = jnp.max(zsub, axis=-1, keepdims=True)
+    e, m = nm.exp_unit(z_raw - m_loc, cfg.frac_bits, cfg.mant_bits)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    l_loc = jnp.sum(addend, axis=-1, keepdims=True)
+    p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=F32)
+
+    acc_ref[...] = acc[None, None]
+    m_ref[...] = jnp.broadcast_to(m_loc[None, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_loc[None, None], l_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "sm_scale", "block_k", "interpret"))
+def flash_hyft_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                      cfg: HyftConfig, sm_scale: float | None = None,
+                      block_k: int = 256, interpret: bool = True,
+                      kv_len_mask: jax.Array | None = None,
+                      k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None):
+    """Split-K fused decode attention with Hyft softmax (Sq = 1).
+
+    Args:
+      q: (B, Hq, 1, D);  k, v: (B, Hkv, Sk, D) float — or int8 FP2FX raws
+        with ``k_scale``/``v_scale`` (B, Hkv, Sk) fp32 per-(head, position)
+        scales, in which case dequantization fuses into the K/V loads.
+      kv_len_mask: optional (B, Sk) validity mask (nonzero = valid); decode
+        always masks (cache padding), so a missing mask means all-valid.
+    Returns (B, Hq, 1, D) fp32.  Forward-only (decode is not trained
+    through); for a single KV split the result is bitwise identical to the
+    monolithic fused kernel on the same block.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Sq == 1 and Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    bk = min(block_k, -(-Sk // 128) * 128)  # lane-aligned KV blocks
+    pad_k = (-Sk) % bk
+    maskf = (kv_len_mask.astype(F32) if kv_len_mask is not None
+             else jnp.ones((B, Sk), F32))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        maskf = jnp.pad(maskf, ((0, 0), (0, pad_k)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad_k)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad_k)))
+    Skp = Sk + pad_k
+    ns = Skp // bk
+    gp = -(-g // 8) * 8  # sublane-aligned group rows
+
+    q3 = q[:, :, 0, :].reshape(B, Hkv, g, D)
+    q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    q3 = q3.reshape(B * Hkv, gp, D)
+    k3 = k.reshape(B * Hkv, Skp, D)
+    v3 = v.reshape(B * Hkv, Skp, D)
+
+    quantized = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, gp, D), lambda b, j: (b, 0, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),
+        pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),
+    ]
+    operands = [q3, k3, v3]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bk), lambda b, j: (b, j))] * 2
+        operands += [k_scale.reshape(B * Hkv, Skp),
+                     v_scale.reshape(B * Hkv, Skp)]
+    in_specs.append(pl.BlockSpec((1, bk), lambda b, j, h=Hkv: (b // h, j)))
+    operands.append(maskf)
+
+    acc, m_st, l_st = pl.pallas_call(
+        functools.partial(_decode_fwd_kernel, cfg=cfg, sm_scale=scale,
+                          quantized=quantized),
+        grid=(B * Hkv, ns),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, gp, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, gp, 128), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, gp, 128), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, ns, gp, D), F32),
+            jax.ShapeDtypeStruct((B * Hkv, ns, gp, 128), I32),
+            jax.ShapeDtypeStruct((B * Hkv, ns, gp, 128), F32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+    # ---- L2: integer-max / fixed-sum tree combine across KV splits
+    m_loc = m_st[..., 0]                        # (BHkv, ns, gp) i32
+    l_loc = l_st[..., 0]                        # (BHkv, ns, gp) f32
+    m_glob = jnp.max(m_loc, axis=1, keepdims=True)
+    alpha = hyft_alpha(m_loc - m_glob, cfg)     # per-split rescale
+    l_glob = jnp.sum(nm.fx_quantize(l_loc * alpha, cfg.acc_bits), axis=1)
+    acc_glob = jnp.sum(acc * alpha[..., None], axis=1)   # (BHkv, gp, D)
+    out = hyft_finalize(acc_glob, l_glob[..., None], cfg)
+    return out[:, :g].reshape(B, Hkv, g, D).reshape(B, Hq, 1, D)

@@ -54,13 +54,15 @@ def _bwd_kernel(s_ref, dy_ref, dz_ref, *, cfg: HyftConfig):
 
 
 def _row_blocks(rows: int, cols: int, block_rows: int | None) -> int:
+    """Row-tile size, clamped to the actual row count (a block can never be
+    larger than the padded input it tiles)."""
     if block_rows is not None:
-        return block_rows
+        return max(1, min(block_rows, rows))
     # keep in+out+int32 intermediates within ~6 MB of VMEM, MXU-aligned rows
     budget = 6 * 1024 * 1024
     per_row = cols * 4 * 6  # tile + out + ~4 int32 temps
     br = max(8, min(512, budget // max(per_row, 1)))
-    return max(8, (br // 8) * 8)
+    return min(max(8, (br // 8) * 8), max(rows, 1))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_rows", "interpret"))
@@ -72,7 +74,7 @@ def hyft_softmax_fwd_kernel(z: jax.Array, cfg: HyftConfig,
     cols = shape[-1]
     z2 = z.reshape(-1, cols)
     rows = z2.shape[0]
-    br = min(_row_blocks(rows, cols, block_rows), rows)
+    br = _row_blocks(rows, cols, block_rows)
     pad = (-rows) % br
     if pad:
         z2 = jnp.pad(z2, ((0, pad), (0, 0)))
@@ -99,7 +101,7 @@ def hyft_softmax_bwd_kernel(s: jax.Array, dy: jax.Array, cfg: HyftConfig,
     cols = shape[-1]
     s2, dy2 = s.reshape(-1, cols), dy.reshape(-1, cols)
     rows = s2.shape[0]
-    br = min(_row_blocks(rows, cols, block_rows), rows)
+    br = _row_blocks(rows, cols, block_rows)
     pad = (-rows) % br
     if pad:
         s2 = jnp.pad(s2, ((0, pad), (0, 0)))

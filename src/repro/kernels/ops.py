@@ -30,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.core.hyft import HyftConfig
 from repro.kernels import hyft_softmax as _hk
-from repro.kernels.flash_attention import flash_hyft_attention  # noqa: F401
+from repro.kernels.flash_attention import (  # noqa: F401
+    flash_hyft_attention, flash_hyft_decode)
 
 F32 = jnp.float32
 
@@ -80,3 +81,20 @@ def hyft_attention(q, k, v, cfg: HyftConfig, sm_scale=None, causal=True,
                                 return_stats=return_stats,
                                 kv_len_mask=as_mask_f(kv_len_mask),
                                 q_offset=q_offset)
+
+
+def hyft_decode_attention(q, k, v, cfg: HyftConfig, sm_scale=None,
+                          block_k=256, kv_len_mask=None, k_scale=None,
+                          v_scale=None):
+    """Split-K fused decode attention (Sq = 1) with Hyft softmax.
+
+    The serving fast path: the KV axis is split across the kernel grid, each
+    split emits local Hyft (max, fixed-sum, acc) stats, and the cross-split
+    combine is the paper's L1/L2 tree (integer max + rescaled fixed sums).
+    Pass int8 ``k``/``v`` with ``k_scale``/``v_scale`` (the fp2fx8 KV-cache
+    layout) to fuse dequantization into the K/V loads.
+    """
+    return flash_hyft_decode(q, k, v, cfg, sm_scale=sm_scale, block_k=block_k,
+                             interpret=_auto_interpret(),
+                             kv_len_mask=as_mask_f(kv_len_mask),
+                             k_scale=k_scale, v_scale=v_scale)

@@ -13,7 +13,14 @@ def main():
     ap.add_argument("--softmax", default="hyft16")
     ap.add_argument("--attn-mode", default=None,
                     choices=["unfused", "chunked", "kernel"],
-                    help="attention path; 'kernel' = fused Pallas decode")
+                    help="attention path; 'kernel' = split-K fused Pallas decode")
+    ap.add_argument("--cache-dtype", default="float32",
+                    help="KV cache storage: jnp dtype name or 'fp2fx8' "
+                         "(int8 FP2FX raws + per-head scales)")
+    ap.add_argument("--decode-loop", default="scan",
+                    choices=["scan", "host"],
+                    help="'scan' = one on-device lax.scan; 'host' = "
+                         "per-token jitted steps (debug)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prefill", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -44,8 +51,10 @@ def main():
             key, (args.batch, cfg.frontend_len, cfg.frontend_dim))
     scfg = ServeConfig(batch=args.batch, prefill_len=args.prefill,
                        max_len=args.prefill + args.max_new + 1,
-                       cache_dtype="float32", temperature=args.temperature,
-                       attn_mode=args.attn_mode)
+                       cache_dtype=args.cache_dtype,
+                       temperature=args.temperature,
+                       attn_mode=args.attn_mode,
+                       decode_loop=args.decode_loop)
     out = generate(model, params, batch, scfg, max_new=args.max_new)
     for i, row in enumerate(out.tolist()):
         print(f"[{i}] {row}")

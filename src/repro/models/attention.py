@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import numerics as nm
 from repro.core.hyft import HyftConfig
 from repro.core.registry import get_softmax, hyft_config_for
+from repro.kernels.flash_attention import hyft_alpha, hyft_finalize
 from repro.models.layers import Param, param
 
 F32 = jnp.float32
@@ -118,18 +119,14 @@ def _hyft_chunk_stats(z, cfg: HyftConfig, m_run):
     e, m = nm.exp_unit(z_raw - m_new, cfg.frac_bits, cfg.mant_bits)
     addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
     l_blk = jnp.sum(addend, axis=-1, keepdims=True)
-    e_a, m_a = nm.exp_unit(m_run - m_new, cfg.frac_bits, cfg.mant_bits)
-    alpha = ((1 << cfg.mant_bits) + m_a).astype(F32) * nm.pow2_float(e_a - cfg.mant_bits)
+    alpha = hyft_alpha(m_run - m_new, cfg)
     p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
     return m_new, alpha, l_blk, p
 
 
-def _hyft_finalize(acc, l_run, cfg: HyftConfig):
-    e_b, m_b = nm.lod_refloat(l_run, cfg.mant_bits)
-    sg, e_n, m_n = nm.float_fields(acc, cfg.mant_bits)
-    res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
-    res = jnp.where(sg == 1, -res, res)
-    return jnp.where(acc == 0.0, 0.0, res)
+# stage-3 finalize is shared with the fused kernels (one arithmetic for every
+# online mode: chunked, fused, split-K decode, sequence-parallel)
+_hyft_finalize = hyft_finalize
 
 
 def _mask_chunks(kv_len_mask, B, nk, chunk):
@@ -320,19 +317,107 @@ def sp_decode_attention(q, k_shard, v_shard, valid_mask, cfg: HyftConfig,
 
 
 # --------------------------------------------------------------------------
-# KV cache
+# KV cache (dense or FP2FX-quantized int8)
 # --------------------------------------------------------------------------
+#
+# ``cache_dtype="fp2fx8"`` stores K/V as int8 FP2FX raws with an fp32
+# per-(head, position) scale — the paper's format-conversion idea applied to
+# the KV stream decode actually spends its bandwidth on.  Writes run the
+# FP2FX converter (``nm.fp2fx`` at total_bits=8); the split-K decode kernel
+# fuses dequantization into its K/V loads, so HBM traffic stays int8.
+
+FP2FX8 = "fp2fx8"
+_FP2FX8_FRAC = 7  # int8 raw at 7 fractional bits; the scale folds in 2**-7
+
+
+def is_fp2fx8(dtype) -> bool:
+    return str(dtype) == FP2FX8
+
+
+def cache_storage_dtype(dtype):
+    """jnp dtype for non-attention cache buffers (SSM state, encoder memory)
+    when the attention cache may be the symbolic "fp2fx8" format."""
+    return jnp.dtype(jnp.float32 if is_fp2fx8(dtype) else dtype)
+
+
+def fp2fx8_quantize(x):
+    """(..., D) float -> (int8 raw, fp32 scale over the last axis).
+
+    Per-(head, position) amax scale maps the row into [-127/128, 127/128];
+    the FP2FX converter (round-to-nearest, saturating) then emits the int8
+    raw.  Dequantization is ``raw * scale`` with the 2**-frac folded in.
+    """
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1)
+    s = jnp.maximum(amax, 1e-30) * F32(128.0 / 127.0)
+    raw = nm.fp2fx(x.astype(F32) / s[..., None], _FP2FX8_FRAC, 8)
+    return raw.astype(jnp.int8), s * F32(2.0 ** -_FP2FX8_FRAC)
+
+
+def fp2fx8_dequantize(raw, scale):
+    return raw.astype(F32) * scale[..., None]
+
+
+def cache_is_quantized(cache) -> bool:
+    return "k_scale" in cache
+
+
+def cache_kv(cache):
+    """(k, v) as float arrays — dequantizes the fp2fx8 layout on demand (the
+    unfused/chunked fallbacks; the split-K kernel reads the raws directly)."""
+    if cache_is_quantized(cache):
+        return (fp2fx8_dequantize(cache["k"], cache["k_scale"]),
+                fp2fx8_dequantize(cache["v"], cache["v_scale"]))
+    return cache["k"], cache["v"]
 
 
 def cache_init(cfg, batch, max_len, dtype) -> dict[str, Any]:
     shape = (batch, cfg.n_kv_heads, max_len, cfg.d_head)
+    if is_fp2fx8(dtype):
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], F32),
+                "v_scale": jnp.zeros(shape[:3], F32)}
+    dtype = jnp.dtype(dtype)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def cache_update(cache, k_new, v_new, pos):
     """k_new/v_new: (B,Hkv,S_new,D); pos: scalar write offset."""
+    if cache_is_quantized(cache):
+        kr, ks = fp2fx8_quantize(k_new)
+        vr, vs = fp2fx8_quantize(v_new)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kr, (0, 0, pos, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vr, (0, 0, pos, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, pos)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, pos)),
+        }
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
                                      (0, 0, pos, 0))
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
                                      (0, 0, pos, 0))
     return {"k": k, "v": v}
+
+
+def decode_attention(q, cache, cfg, *, kv_len_mask=None):
+    """Sq=1 attention over the KV cache — the serving fast path.
+
+    With a Hyft softmax and ``attn_mode="kernel"`` this dispatches to the
+    split-K fused decode kernel (``repro.kernels.ops.hyft_decode_attention``),
+    reading the fp2fx8 cache raws directly (dequant fused into the K/V
+    loads).  Every other combination dequantizes once and falls through to
+    the regular mode dispatch.
+    """
+    hcfg = hyft_config_for(cfg.softmax_impl)
+    mode = getattr(cfg, "attn_mode", "unfused")
+    if hcfg is not None and mode == "kernel" and q.shape[2] == 1:
+        from repro.kernels import ops
+        return ops.hyft_decode_attention(
+            q, cache["k"], cache["v"], hcfg,
+            kv_len_mask=ops.as_mask_f(kv_len_mask),
+            k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale")).astype(q.dtype)
+    k, v = cache_kv(cache)
+    return attention_fwd(q, k, v, cfg, causal=False, kv_len_mask=kv_len_mask)

@@ -157,10 +157,13 @@ def prefill_parallel(params, cache, batch, cfg):
 
 
 def init_cache(params, cfg, batch, max_len, dtype):
+    """``dtype`` may be a jnp dtype or "fp2fx8" (int8 FP2FX self-attention
+    cache; the encoder memory stays float)."""
     c = attn.cache_init(cfg, batch, max_len, dtype)
     return {"self": jax.tree.map(
         lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c),
-        "memory": jnp.zeros((batch, cfg.frontend_len, cfg.d_model), dtype)}
+        "memory": jnp.zeros((batch, cfg.frontend_len, cfg.d_model),
+                            attn.cache_storage_dtype(dtype))}
 
 
 def decode_step(params, cache, tokens1, pos, cfg):
@@ -180,8 +183,7 @@ def decode_step(params, cache, tokens1, pos, cfg):
         h = norm_fn(lp["norms"]["pre_attn"], carry)
         q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
         nc = attn.cache_update(lc, k, v, pos)
-        o = attn.attention_fwd(q, nc["k"], nc["v"], cfg, causal=False,
-                               kv_len_mask=kv_mask)
+        o = attn.decode_attention(q, nc, cfg, kv_len_mask=kv_mask)
         y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
         h = norm_fn(lp["norms"]["pre_cross"], y)
         q, k, v = attn.qkv_proj(lp["cross"], h, memory, cfg, positions, mem_pos)

@@ -58,10 +58,10 @@ def _block_apply(p, x, cfg, positions, *, causal=True, decode_cache=None,
     q, k, v = attn.qkv_proj(p["attn"], h, h, cfg, positions, positions)
     if decode_cache is not None:
         cache = attn.cache_update(decode_cache, k, v, pos_offset)
-        # masked decode goes through the mode dispatch: with
-        # attn_mode="kernel" this stays on the fused Pallas path
-        o = attn.attention_fwd(q, cache["k"], cache["v"], cfg, causal=False,
-                               kv_len_mask=kv_len_mask)
+        # masked decode goes through the decode dispatch: with
+        # attn_mode="kernel" this is the split-K fused Pallas path, reading
+        # fp2fx8 cache raws directly when the cache is quantized
+        o = attn.decode_attention(q, cache, cfg, kv_len_mask=kv_len_mask)
     else:
         cache = None
         o = attn.attention_fwd(q, k, v, cfg, causal=causal)
@@ -235,16 +235,19 @@ def lm_loss(params, batch, cfg, *, remat="full", z_loss=1e-4,
 
 
 def init_cache(params, cfg, batch, max_len, dtype):
+    """``dtype`` may be a jnp dtype or the symbolic "fp2fx8" string (int8
+    FP2FX-quantized attention cache; SSM state stays float)."""
+    sdtype = attn.cache_storage_dtype(dtype)
     if cfg.family in ("dense", "moe", "vlm"):
         c = attn.cache_init(cfg, batch, max_len, dtype)
         return {"blocks": jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)}
     if cfg.family == "ssm":
-        c = ssm_mod.ssm_cache_init(cfg, batch, dtype)
+        c = ssm_mod.ssm_cache_init(cfg, batch, sdtype)
         return {"blocks": jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)}
     if cfg.family == "hybrid":
-        c = ssm_mod.ssm_cache_init(cfg, batch, dtype)
+        c = ssm_mod.ssm_cache_init(cfg, batch, sdtype)
         blocks = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)
         ninv = hybrid_n_invocations(cfg)

@@ -1,1 +1,2 @@
-from repro.serve.engine import build_serve_step, generate  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    build_decode_loop, build_serve_step, generate)

@@ -1,4 +1,21 @@
-"""Serving engine: batched prefill + greedy/temperature decode."""
+"""Serving engine: batched prefill + fully on-device decode.
+
+``ServeConfig.decode_loop`` picks the loop:
+
+  scan — the production path: the whole decode runs inside ONE jitted
+         ``lax.scan`` (sampling included), so there is exactly one compile
+         and zero per-token host round-trips.  The KV-cache buffers are
+         donated into the loop so the scan's in-place ``dynamic_update_slice``
+         writes reuse them instead of copying.
+  host — one jitted step per token, dispatched from Python; the debugging
+         fallback (inspectable per-token state) and the dispatch-overhead
+         baseline the benchmark compares against.
+
+Step/loop functions are compiled once per (model config, serve config
+[, horizon]) and cached — repeated ``generate`` calls re-trace nothing.
+Greedy decode (``temperature == 0``) never touches the PRNG: no split, no
+key threading.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,19 +27,90 @@ from repro.configs.base import ServeConfig
 
 I32 = jnp.int32
 
+_PREFILL_CACHE: dict = {}
+_STEP_CACHE: dict = {}
+_LOOP_CACHE: dict = {}
+_CACHE_CAP = 32  # compiled entries per cache; oldest evicted (re-jit on miss)
+
+
+def _cache_put(cache: dict, key, value):
+    """Insert with FIFO eviction so a long-lived server with many distinct
+    (config, horizon) combinations doesn't retain executables unboundedly."""
+    while len(cache) >= _CACHE_CAP:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+    return value
+
+
+def build_prefill(model):
+    """Jit'd (params, cache, batch) -> (logits, cache, len).
+
+    The eager prefill used to re-trace the whole stack op-by-op on every
+    ``generate`` call; jitted + cached it compiles once per model config.
+    The incoming (empty) cache is donated — prefill overwrites it anyway.
+    """
+    ck = model.cfg
+    if ck not in _PREFILL_CACHE:
+        return _cache_put(_PREFILL_CACHE, ck, jax.jit(
+            lambda params, cache, batch: model.prefill(params, cache, batch),
+            donate_argnums=(1,)))
+    return _PREFILL_CACHE[ck]
+
+
+def _sample(logits, key, temperature):
+    """logits (B, V) -> token ids (B,).  Greedy when temperature == 0."""
+    if temperature > 0:
+        return jax.random.categorical(key, logits / temperature, -1)
+    return jnp.argmax(logits, -1)
+
 
 def build_serve_step(model, scfg: ServeConfig):
-    """Returns jit'd (params, cache, tokens1, pos) -> (next_token, cache)."""
-    @functools.partial(jax.jit, static_argnames=())
-    def step(params, cache, tokens1, pos, key):
-        logits, cache = model.decode_step(params, cache, tokens1, pos)
-        logits = logits[:, -1, :]
-        if scfg.temperature > 0:
-            nxt = jax.random.categorical(key, logits / scfg.temperature, -1)
-        else:
-            nxt = jnp.argmax(logits, -1)
-        return nxt.astype(I32)[:, None], cache
-    return step
+    """Jit'd (params, cache, tokens1, pos, key) -> (next_token, cache).
+
+    Cached per (model config, serve config): repeated ``generate`` calls
+    reuse the same compiled step instead of re-jitting every time.
+    """
+    ck = (model.cfg, scfg)
+    if ck not in _STEP_CACHE:
+        @jax.jit
+        def step(params, cache, tokens1, pos, key):
+            logits, cache = model.decode_step(params, cache, tokens1, pos)
+            nxt = _sample(logits[:, -1, :], key, scfg.temperature)
+            return nxt.astype(I32)[:, None], cache
+        _cache_put(_STEP_CACHE, ck, step)
+    return _STEP_CACHE[ck]
+
+
+def build_decode_loop(model, scfg: ServeConfig, steps: int):
+    """Jit'd (params, cache, tok0, pos0, key) -> ((B, steps) tokens, cache).
+
+    The whole decode is one ``lax.scan`` on device: each iteration appends
+    to the KV cache at ``pos0 + i``, samples (or argmaxes) the next token,
+    and feeds it back — no host in the loop.  The cache argument is donated
+    so the scan updates its buffers in place.
+    """
+    ck = (model.cfg, scfg, steps)
+    if ck not in _LOOP_CACHE:
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def loop(params, cache, tok0, pos0, key):
+            def body(carry, i):
+                cache_c, tok, key_c = carry
+                if scfg.temperature > 0:
+                    key_c, sub = jax.random.split(key_c)
+                else:
+                    sub = key_c
+                logits, cache_c = model.decode_step(params, cache_c, tok,
+                                                    pos0 + i)
+                nxt = _sample(logits[:, -1, :], sub, scfg.temperature)
+                tok = nxt.astype(I32)[:, None]
+                return (cache_c, tok, key_c), tok[:, 0]
+            (cache, _, _), toks = jax.lax.scan(body, (cache, tok0, key),
+                                               jnp.arange(steps, dtype=I32))
+            # the final cache is returned so the donated input buffers have
+            # an output to alias with (true in-place scan on TPU)
+            return toks.T, cache
+        _cache_put(_LOOP_CACHE, ck, loop)
+    return _LOOP_CACHE[ck]
 
 
 def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
@@ -32,14 +120,25 @@ def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
     from repro.models import resolve_attn_mode
     model = resolve_attn_mode(model, scfg.attn_mode)
     B = batch["tokens"].shape[0]
-    cache = model.init_cache(params, B, scfg.max_len, jnp.dtype(scfg.cache_dtype))
-    logits, cache, pos = model.prefill(params, cache, batch)
+    cache = model.init_cache(params, B, scfg.max_len, scfg.cache_dtype)
+    logits, cache, pos = build_prefill(model)(params, cache, batch)
     last = logits[:, -1, :] if logits.ndim == 3 else logits
     tok = jnp.argmax(last, -1).astype(I32)[:, None]
-    out = [tok]
-    step = build_serve_step(model, scfg)
-    for i in range(max_new - 1):
-        key, sub = jax.random.split(key)
-        tok, cache = step(params, cache, tok, pos + i, sub)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+
+    if scfg.decode_loop == "host":
+        out = [tok]
+        step = build_serve_step(model, scfg)
+        for i in range(max_new - 1):
+            if scfg.temperature > 0:
+                key, sub = jax.random.split(key)
+            else:
+                sub = key
+            tok, cache = step(params, cache, tok, pos + i, sub)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    if max_new <= 1:
+        return tok
+    loop = build_decode_loop(model, scfg, max_new - 1)
+    toks, _ = loop(params, cache, tok, pos, key)
+    return jnp.concatenate([tok, toks], axis=1)

@@ -1,0 +1,278 @@
+"""The decode fast path: split-K kernel, fp2fx8 KV cache, scanned loop.
+
+Covers the three legs of the serving datapath:
+  * split-K decode kernel vs the monolithic fused kernel — bitwise on a
+    shared single-block shape (same blocking -> same arithmetic), error-
+    enveloped on long masked multi-split shapes (the combine applies one
+    extra Hyft rescale per split, like the sequence-parallel L2 layer);
+  * the FP2FX-quantized int8 cache: round-trip error bound, update layout,
+    fused-dequant kernel path;
+  * ``generate``: scanned on-device loop == host loop token-for-token,
+    dense and quantized, across attention modes and model families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hyft import HYFT16, HYFT32
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models.attention import unfused_attention
+
+F32 = jnp.float32
+
+
+def _qkv(B, Hq, Hkv, Sk, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, Hq, 1, D), F32),
+            jax.random.normal(ks[1], (B, Hkv, Sk, D), F32),
+            jax.random.normal(ks[2], (B, Hkv, Sk, D), F32))
+
+
+# --------------------------------------------------------------------------
+# split-K decode kernel
+# --------------------------------------------------------------------------
+
+
+def test_splitk_bitwise_matches_monolithic_single_block():
+    """One KV split == one monolithic kv block: identical blocking, so the
+    split-K combine degenerates to alpha = hyft-exp(0) = 1.0 exactly and
+    the outputs must agree bit for bit."""
+    B, Hq, Hkv, Sk, D, valid = 2, 4, 2, 128, 32, 100
+    q, k, v = _qkv(B, Hq, Hkv, Sk, D)
+    mask = (jnp.arange(Sk)[None, :] < valid).astype(F32).repeat(B, 0)
+    o_split = ops.hyft_decode_attention(q, k, v, HYFT32, kv_len_mask=mask,
+                                        block_k=128)
+    o_mono = ops.hyft_attention(q, k, v, HYFT32, causal=False,
+                                kv_len_mask=mask, block_k=128)
+    assert np.array_equal(np.asarray(o_split), np.asarray(o_mono))
+
+
+@pytest.mark.parametrize("Sk,valid", [(2048, 1500), (2048, 2048), (512, 300)])
+def test_splitk_long_masked_decode(Sk, valid):
+    """Sk=2048 masked decode stays on the split-K kernel (no fallback) and
+    lands inside the Hyft error envelope of both references."""
+    B, Hq, Hkv, D = 1, 16, 8, 64
+    q, k, v = _qkv(B, Hq, Hkv, Sk, D, seed=1)
+    mask = (jnp.arange(Sk)[None, :] < valid).astype(F32).repeat(B, 0)
+    o = ops.hyft_decode_attention(q, k, v, HYFT32, kv_len_mask=mask)
+    assert o.shape == (B, Hq, 1, D)
+    o_ref = unfused_attention(q, k, v, "hyft32", causal=False,
+                              kv_len_mask=mask > 0)
+    o_exact = unfused_attention(q, k, v, "exact", causal=False,
+                                kv_len_mask=mask > 0)
+    assert float(jnp.abs(o - o_ref).max()) < 0.06
+    assert float(jnp.abs(o - o_exact).max()) < 0.10
+
+
+def test_splitk_unaligned_and_tiny_kv():
+    """Sk below one lane tile and non-multiples of the block are padded and
+    the padding folded into the mask."""
+    B, Hq, Hkv, Sk, D = 2, 4, 4, 16, 16
+    q, k, v = _qkv(B, Hq, Hkv, Sk, D, seed=2)
+    mask = (jnp.arange(Sk)[None, :] < 9).astype(F32).repeat(B, 0)
+    o = ops.hyft_decode_attention(q, k, v, HYFT16, kv_len_mask=mask)
+    o_ref = unfused_attention(q, k, v, "hyft16", causal=False,
+                              kv_len_mask=mask > 0)
+    assert float(jnp.abs(o.astype(F32) - o_ref.astype(F32)).max()) < 0.13
+    o300 = ops.hyft_decode_attention(*_qkv(1, 8, 4, 300, 32, seed=3), HYFT32)
+    assert o300.shape == (1, 8, 1, 32)
+    assert bool(jnp.all(jnp.isfinite(o300)))
+
+
+# --------------------------------------------------------------------------
+# fp2fx8 KV cache
+# --------------------------------------------------------------------------
+
+
+def test_fp2fx8_roundtrip_error_bound():
+    """|x - dequant(quant(x))| <= half an int8 ulp of the per-row scale."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64, 32), F32) * 5
+    raw, scale = attn.fp2fx8_quantize(x)
+    assert raw.dtype == jnp.int8
+    deq = attn.fp2fx8_dequantize(raw, scale)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float((jnp.abs(deq - x) / amax).max()) <= 2.0 ** -7
+    # the row max survives quantization without saturating
+    assert int(jnp.abs(raw).max()) == 127
+
+
+def test_fp2fx8_cache_update_layout():
+    class Cfg:
+        n_kv_heads, d_head = 2, 16
+    cache = attn.cache_init(Cfg, 3, 8, "fp2fx8")
+    assert attn.cache_is_quantized(cache)
+    assert cache["k"].dtype == jnp.int8 and cache["k_scale"].shape == (3, 2, 8)
+    k_new = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 2, 16), F32)
+    v_new = jax.random.normal(jax.random.PRNGKey(2), (3, 2, 2, 16), F32)
+    cache = attn.cache_update(cache, k_new, v_new, 4)
+    k_deq, v_deq = attn.cache_kv(cache)
+    np.testing.assert_allclose(np.asarray(k_deq[:, :, 4:6]),
+                               np.asarray(k_new), atol=0.05)
+    np.testing.assert_allclose(np.asarray(v_deq[:, :, 4:6]),
+                               np.asarray(v_new), atol=0.05)
+    assert float(jnp.abs(k_deq[:, :, :4]).max()) == 0.0  # untouched slots
+
+
+def test_splitk_fused_dequant_matches_dequant_then_dense():
+    """The kernel's in-load dequant == dequantize-then-run on the same raws."""
+    B, Hq, Hkv, Sk, D = 2, 8, 4, 256, 32
+    q, k, v = _qkv(B, Hq, Hkv, Sk, D, seed=4)
+    mask = (jnp.arange(Sk)[None, :] < 200).astype(F32).repeat(B, 0)
+    kr, ks = attn.fp2fx8_quantize(k)
+    vr, vs = attn.fp2fx8_quantize(v)
+    o_fused = ops.hyft_decode_attention(q, kr, vr, HYFT32, kv_len_mask=mask,
+                                        k_scale=ks, v_scale=vs)
+    o_deq = ops.hyft_decode_attention(q, attn.fp2fx8_dequantize(kr, ks),
+                                      attn.fp2fx8_dequantize(vr, vs), HYFT32,
+                                      kv_len_mask=mask)
+    np.testing.assert_allclose(np.asarray(o_fused), np.asarray(o_deq),
+                               atol=1e-6, rtol=1e-6)
+    # and quantization noise stays small vs the dense-cache kernel
+    o_dense = ops.hyft_decode_attention(q, k, v, HYFT32, kv_len_mask=mask)
+    assert float(jnp.abs(o_fused - o_dense).max()) < 0.08
+
+
+def test_decode_attention_dispatch_quantized_kernel():
+    """attn_mode=kernel + fp2fx8 cache -> split-K kernel on the raws; the
+    result tracks the dequantized unfused reference."""
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab=32,
+                      softmax_impl="hyft32", attn_mode="kernel")
+    B, Sk = 2, 64
+    q, k, v = _qkv(B, 4, 2, Sk, 16, seed=5)
+    kr, ks = attn.fp2fx8_quantize(k)
+    vr, vs = attn.fp2fx8_quantize(v)
+    cache = {"k": kr, "v": vr, "k_scale": ks, "v_scale": vs}
+    mask = (jnp.arange(Sk)[None, :] < 40).repeat(B, 0)
+    o = attn.decode_attention(q, cache, cfg, kv_len_mask=mask)
+    o_ref = unfused_attention(q, *attn.cache_kv(cache), "hyft32",
+                              causal=False, kv_len_mask=mask)
+    assert float(jnp.abs(o - o_ref).max()) < 0.06
+
+
+# --------------------------------------------------------------------------
+# scanned decode loop
+# --------------------------------------------------------------------------
+
+
+def _serve_setup(arch="qwen2-1.5b", **kw):
+    from repro.configs import get_config, smoke_config
+    from repro.models import build_model
+    from repro.models.layers import unbox
+    cfg = smoke_config(get_config(arch)).with_(
+        softmax_impl="hyft16", vocab=64, **kw)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                          cfg.vocab, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.frontend_len, cfg.frontend_dim))
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("cache_dtype", ["float32", "fp2fx8"])
+@pytest.mark.parametrize("attn_mode", [None, "kernel"])
+def test_generate_scan_matches_host(cache_dtype, attn_mode):
+    """The on-device lax.scan loop is token-for-token identical to the
+    per-token host loop — dense and quantized cache, with and without the
+    split-K kernel in the decode step."""
+    from repro.configs.base import ServeConfig
+    from repro.serve.engine import generate
+    cfg, model, params, batch = _serve_setup()
+    outs = {}
+    for loop in ("host", "scan"):
+        scfg = ServeConfig(max_len=16, cache_dtype=cache_dtype,
+                           attn_mode=attn_mode, decode_loop=loop)
+        outs[loop] = generate(model, params, batch, scfg, max_new=5)
+    assert outs["scan"].shape == (2, 5)
+    assert outs["scan"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(outs["host"]),
+                                  np.asarray(outs["scan"]))
+    assert bool(jnp.all((outs["scan"] >= 0) & (outs["scan"] < cfg.vocab)))
+
+
+@pytest.mark.parametrize("arch", ["whisper-medium", "zamba2-7b"])
+def test_generate_scan_other_families_quantized(arch):
+    """Enc-dec and hybrid decode run the scanned loop over an fp2fx8 cache
+    (SSM state / encoder memory stay float)."""
+    from repro.configs.base import ServeConfig
+    from repro.serve.engine import generate
+    cfg, model, params, batch = _serve_setup(arch)
+    outs = {}
+    for loop in ("host", "scan"):
+        scfg = ServeConfig(max_len=16, cache_dtype="fp2fx8", decode_loop=loop)
+        outs[loop] = generate(model, params, batch, scfg, max_new=4)
+    np.testing.assert_array_equal(np.asarray(outs["host"]),
+                                  np.asarray(outs["scan"]))
+
+
+def test_generate_sampled_scan_runs():
+    """Temperature > 0 threads the PRNG through the scan carry."""
+    from repro.configs.base import ServeConfig
+    from repro.serve.engine import generate
+    cfg, model, params, batch = _serve_setup()
+    scfg = ServeConfig(max_len=16, cache_dtype="float32", temperature=0.8)
+    out = generate(model, params, batch, scfg, max_new=6,
+                   key=jax.random.PRNGKey(7))
+    assert out.shape == (2, 6)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab)))
+
+
+def test_serve_step_and_loop_are_cached():
+    """Repeated generate calls reuse the compiled prefill/step/loop."""
+    from repro.configs.base import ServeConfig
+    from repro.serve import engine
+    cfg, model, params, batch = _serve_setup()
+    scfg = ServeConfig(max_len=16, cache_dtype="float32", decode_loop="scan")
+    engine.generate(model, params, batch, scfg, max_new=3)
+    n_loop, n_pre = len(engine._LOOP_CACHE), len(engine._PREFILL_CACHE)
+    engine.generate(model, params, batch, scfg, max_new=3)
+    assert len(engine._LOOP_CACHE) == n_loop
+    assert len(engine._PREFILL_CACHE) == n_pre
+    # a different horizon adds exactly one loop entry, reuses prefill
+    engine.generate(model, params, batch, scfg, max_new=4)
+    assert len(engine._LOOP_CACHE) == n_loop + 1
+    assert len(engine._PREFILL_CACHE) == n_pre
+
+
+def test_greedy_host_loop_skips_prng():
+    """temperature == 0 must not consume PRNG entropy: the key never splits,
+    so greedy decode is reproducible regardless of the key passed in."""
+    from repro.configs.base import ServeConfig
+    from repro.serve.engine import generate
+    cfg, model, params, batch = _serve_setup()
+    for loop in ("host", "scan"):
+        scfg = ServeConfig(max_len=16, cache_dtype="float32", decode_loop=loop)
+        o1 = generate(model, params, batch, scfg, max_new=4,
+                      key=jax.random.PRNGKey(0))
+        o2 = generate(model, params, batch, scfg, max_new=4,
+                      key=jax.random.PRNGKey(123))
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+# --------------------------------------------------------------------------
+# satellite: _row_blocks clamping
+# --------------------------------------------------------------------------
+
+
+def test_row_blocks_clamps_to_rows():
+    from repro.kernels.hyft_softmax import _row_blocks
+    assert _row_blocks(4, 64, None) == 4          # fewer rows than the floor
+    assert _row_blocks(4, 64, 128) == 4           # explicit block clamped too
+    assert _row_blocks(10 ** 6, 64, None) == 512  # budget cap unchanged
+    assert _row_blocks(10 ** 6, 10 ** 6, None) == 8
+
+
+def test_small_row_softmax_kernel_matches_oracle():
+    """rows < 8 used to force an 8-row block + padding; the clamped block
+    must still agree with the pure-JAX oracle bit for bit."""
+    from repro.core.hyft import hyft_softmax_fwd
+    from repro.kernels.hyft_softmax import hyft_softmax_fwd_kernel
+    z = jax.random.normal(jax.random.PRNGKey(0), (3, 64), F32) * 3
+    out_k = hyft_softmax_fwd_kernel(z, HYFT32, interpret=True)
+    out_o = hyft_softmax_fwd(z, HYFT32)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_o))
