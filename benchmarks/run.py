@@ -5,8 +5,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_decode, bench_softmax, roofline_report,
-                            table1_accuracy, table2_training, table3_hardware)
+    from benchmarks import (bench_decode, bench_serve, bench_softmax,
+                            roofline_report, table1_accuracy, table2_training,
+                            table3_hardware)
 
     def report(line: str) -> None:
         print(line, flush=True)
@@ -22,6 +23,11 @@ def main() -> None:
     with open("BENCH_decode.json", "w") as f:
         json.dump(decode_results, f, indent=2)
     report("# wrote BENCH_decode.json")
+    report("## Serving: continuous batching vs lockstep (ragged traffic)")
+    serve_results = bench_serve.run(report)
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(serve_results, f, indent=2)
+    report("# wrote BENCH_serve.json")
     report("## Table 1: drop-in inference accuracy (synthetic-GLUE proxy)")
     table1_accuracy.run(report)
     report("## Table 2: training-through-Hyft accuracy (proxy)")

@@ -116,6 +116,18 @@ class ServeConfig:
     # decode loop: "scan" = one jitted on-device lax.scan (donated cache,
     # sampling in the loop); "host" = per-token jitted steps (debug fallback)
     decode_loop: str = "scan"
+    # --- continuous batching (repro/serve/scheduler.py) ---
+    # per-sequence stop token: a slot that emits it is freed on device
+    # (None = run every request to its own max_new)
+    eos_id: Optional[int] = None
+    # slot-pool size: the fixed batch dimension of the serving KV cache
+    n_slots: int = 8
+    # "continuous" = admit queued requests into freed slots mid-decode;
+    # "lockstep" = drain the whole pool before admitting the next group
+    # (the PR 2-style rectangular baseline, generalized to ragged prompts)
+    scheduler: str = "lockstep"
+    # jitted masked decode steps per burst between host admission checks
+    decode_burst: int = 8
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,7 +1,12 @@
-"""Serving launcher CLI: prefill a batch of prompts, decode greedily.
+"""Serving launcher CLI: lockstep batch decode or continuous batching.
 
+  # uniform rectangular batch, one on-device lax.scan (PR 2 fast path)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --batch 4 --prefill 16 --max-new 16 --softmax hyft16
+
+  # continuous batching: ragged prompts, slot-pool KV cache, EOS early-exit
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --scheduler continuous --n-slots 4 --batch 8 --max-new 24 --eos-id 7
 """
 import argparse
 
@@ -21,41 +26,93 @@ def main():
                     choices=["scan", "host"],
                     help="'scan' = one on-device lax.scan; 'host' = "
                          "per-token jitted steps (debug)")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prefill", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--scheduler", default="lockstep",
+                    choices=["lockstep", "continuous"],
+                    help="'continuous' = slot-pool continuous batching with "
+                         "ragged prompts and EOS early-exit; 'lockstep' = "
+                         "one rectangular batch (PR 2 fast path)")
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="slot-pool size for --scheduler continuous")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token: a continuous-batching slot that emits "
+                         "it is freed immediately")
+    ap.add_argument("--decode-burst", type=int, default=8,
+                    help="jitted decode steps between admission checks")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lockstep batch size / continuous request count")
+    ap.add_argument("--prefill", type=int, default=16,
+                    help="prompt length (continuous: the maximum; prompts "
+                         "are ragged in [prefill//2, prefill])")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="decode horizon (continuous: the maximum; horizons "
+                         "are ragged in [max_new//2, max_new])")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config, smoke_config
     from repro.configs.base import ServeConfig
     from repro.models import build_model
     from repro.models.layers import unbox
     from repro.serve.engine import generate
+    from repro.serve.scheduler import Request, serve
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     cfg = cfg.with_(softmax_impl=args.softmax)
     model = build_model(cfg)
-    params = unbox(model.init(jax.random.PRNGKey(args.seed)))
+    root = jax.random.PRNGKey(args.seed)
+    init_key, data_key, sample_key = jax.random.split(root, 3)
+    params = unbox(model.init(init_key))
 
-    key = jax.random.PRNGKey(args.seed + 1)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prefill), 0, cfg.vocab, jnp.int32)}
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            key, (args.batch, cfg.frontend_len, cfg.frontend_dim))
     scfg = ServeConfig(batch=args.batch, prefill_len=args.prefill,
                        max_len=args.prefill + args.max_new + 1,
                        cache_dtype=args.cache_dtype,
                        temperature=args.temperature,
                        attn_mode=args.attn_mode,
-                       decode_loop=args.decode_loop)
-    out = generate(model, params, batch, scfg, max_new=args.max_new)
+                       decode_loop=args.decode_loop,
+                       scheduler=args.scheduler,
+                       n_slots=args.n_slots,
+                       eos_id=args.eos_id,
+                       decode_burst=args.decode_burst)
+
+    if args.scheduler == "continuous":
+        rng = np.random.default_rng(args.seed)
+        reqs = []
+        for rid in range(args.batch):
+            plen = int(rng.integers(max(1, args.prefill // 2),
+                                    args.prefill + 1))
+            frames = None
+            if cfg.family == "encdec":
+                frames = np.asarray(jax.random.normal(
+                    jax.random.fold_in(data_key, rid),
+                    (cfg.frontend_len, cfg.frontend_dim)))
+            reqs.append(Request(
+                rid=rid,
+                tokens=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                max_new=int(rng.integers(max(1, args.max_new // 2),
+                                         args.max_new + 1)),
+                frames=frames))
+        done = serve(model, params, reqs, scfg, key=sample_key)
+        for rid in sorted(done):
+            c = done[rid]
+            print(f"[{rid}] prompt={c.prompt_len} new={len(c.tokens)} "
+                  f"{c.tokens}")
+        return
+
+    batch = {"tokens": jax.random.randint(
+        data_key, (args.batch, args.prefill), 0, cfg.vocab, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            data_key, (args.batch, cfg.frontend_len, cfg.frontend_dim))
+    # the sampling key derives from --seed (it used to be dropped, so
+    # --temperature runs always sampled with the hardcoded PRNGKey(0))
+    out = generate(model, params, batch, scfg, max_new=args.max_new,
+                   key=sample_key)
     for i, row in enumerate(out.tolist()):
         print(f"[{i}] {row}")
 

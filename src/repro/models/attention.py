@@ -401,6 +401,38 @@ def cache_update(cache, k_new, v_new, pos):
     return {"k": k, "v": v}
 
 
+def cache_update_ragged(cache, k_new, v_new, pos_b, write_mask=None):
+    """Per-row cache scatter: row ``b``'s (Hkv, 1, D) K/V lands at its own
+    position ``pos_b[b]`` — the slot-pool decode step, where every slot sits
+    at a different sequence length.
+
+    ``write_mask`` (B,) bool gates the write per row: a False row re-writes
+    its *old* cache content at ``pos_b[b]`` (an exact no-op), so finished
+    (EOS'd / drained) slots in the continuous-batching pool stop mutating
+    their cache while the rest of the pool keeps decoding.
+    """
+    B = k_new.shape[0]
+    gate = jnp.ones((B,), bool) if write_mask is None else write_mask
+
+    def upd(buf, new, pos, g):
+        # buf (Hkv, L[, D]); position axis is axis 1 for values and scales
+        start = (0, pos) + (0,) * (buf.ndim - 2)
+        old = jax.lax.dynamic_slice(buf, start, new.shape)
+        new = jnp.where(g, new.astype(buf.dtype), old)
+        return jax.lax.dynamic_update_slice(buf, new, start)
+
+    up = jax.vmap(upd, in_axes=(0, 0, 0, 0))
+    if cache_is_quantized(cache):
+        kr, ks = fp2fx8_quantize(k_new)
+        vr, vs = fp2fx8_quantize(v_new)
+        return {"k": up(cache["k"], kr, pos_b, gate),
+                "v": up(cache["v"], vr, pos_b, gate),
+                "k_scale": up(cache["k_scale"], ks, pos_b, gate),
+                "v_scale": up(cache["v_scale"], vs, pos_b, gate)}
+    return {"k": up(cache["k"], k_new, pos_b, gate),
+            "v": up(cache["v"], v_new, pos_b, gate)}
+
+
 def decode_attention(q, cache, cfg, *, kv_len_mask=None):
     """Sq=1 attention over the KV cache — the serving fast path.
 

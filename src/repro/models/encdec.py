@@ -123,9 +123,15 @@ def loss(params, batch, cfg, *, remat="full", z_loss=1e-4, **_):
 def prefill_parallel(params, cache, batch, cfg):
     """One-pass prefill: encode once, then a teacher-forced decoder pass that
     writes the whole prompt's self-attention K/V into the cache (exactly the
-    dense-LM prefill pattern) — vs. the baseline token-by-token scan."""
+    dense-LM prefill pattern) — vs. the baseline token-by-token scan.
+
+    ``batch["lengths"]`` (B,) enables ragged prefill: right-padded prompts,
+    per-row self-attention validity via the ``kv_len_mask`` contract, and
+    logits gathered at each row's position ``lengths[b] - 1``.
+    """
     memory = encode(params, batch["frames"], cfg, remat="none")
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     B, S = tokens.shape
     x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
     Tm = memory.shape[1]
@@ -133,13 +139,15 @@ def prefill_parallel(params, cache, batch, cfg):
     mem_pos = jnp.broadcast_to(jnp.arange(Tm, dtype=jnp.int32), (B, Tm))
     _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
     mem_c = memory.astype(cfg.cdtype)
+    kv_mask = (None if lengths is None
+               else jnp.arange(S)[None, :] < lengths[:, None])
 
     def body(carry, xs_):
         lp, lc = xs_
         h = norm_fn(lp["norms"]["pre_attn"], carry)
         q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
         nc = attn.cache_update(lc, k, v, 0)
-        o = attn.attention_fwd(q, k, v, cfg, causal=True)
+        o = attn.attention_fwd(q, k, v, cfg, causal=True, kv_len_mask=kv_mask)
         y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
         h = norm_fn(lp["norms"]["pre_cross"], y)
         q, k, v = attn.qkv_proj(lp["cross"], h, mem_c, cfg, positions, mem_pos)
@@ -149,8 +157,11 @@ def prefill_parallel(params, cache, batch, cfg):
         return y + mlp_mod.mlp_apply(lp["mlp"], h, cfg).astype(y.dtype), nc
 
     x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], cache["self"]))
+    if lengths is not None:
+        x = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
     x = norm_fn(params["final_norm"], x)
-    logits = logits_fn(params, x[:, -1:], cfg.with_(tie_embeddings=True))
+    logits = logits_fn(params, x if lengths is not None else x[:, -1:],
+                       cfg.with_(tie_embeddings=True))
     new_cache = {"self": new_self,
                  "memory": memory.astype(cache["memory"].dtype)}
     return logits, new_cache, S
@@ -166,23 +177,35 @@ def init_cache(params, cfg, batch, max_len, dtype):
                             attn.cache_storage_dtype(dtype))}
 
 
-def decode_step(params, cache, tokens1, pos, cfg):
-    """One decoder token against a cached encoder memory + self KV cache."""
+def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
+    """One decoder token against a cached encoder memory + self KV cache.
+
+    ``pos`` may be a (B,) vector (ragged slot-pool decode: per-row write
+    position + attention prefix); ``write_mask`` (B,) gates the self-KV
+    write per row (finished slots stop mutating their cache).
+    """
     B = tokens1.shape[0]
     x = embed_lookup(params["embed"], tokens1).astype(cfg.cdtype)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    ragged = jnp.ndim(pos) >= 1
+    positions = (jnp.asarray(pos, jnp.int32).reshape(B, 1) if ragged
+                 else jnp.full((B, 1), pos, jnp.int32))
     memory = cache["memory"].astype(cfg.cdtype)
     Tm = memory.shape[1]
     mem_pos = jnp.broadcast_to(jnp.arange(Tm, dtype=jnp.int32), (B, Tm))
     max_len = cache["self"]["k"].shape[3]
-    kv_mask = (jnp.arange(max_len) <= pos)[None, :].repeat(B, 0)
+    kv_mask = jnp.arange(max_len)[None, :] <= positions
     _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
 
     def body(carry, xs_):
         lp, lc = xs_
         h = norm_fn(lp["norms"]["pre_attn"], carry)
         q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
-        nc = attn.cache_update(lc, k, v, pos)
+        if ragged or write_mask is not None:
+            nc = attn.cache_update_ragged(
+                lc, k, v, jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+                write_mask)
+        else:
+            nc = attn.cache_update(lc, k, v, pos)
         o = attn.decode_attention(q, nc, cfg, kv_len_mask=kv_mask)
         y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
         h = norm_fn(lp["norms"]["pre_cross"], y)

@@ -13,6 +13,7 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer
@@ -45,7 +46,8 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key: encdec.init(key, cfg),
             loss=lambda p, b, **kw: encdec.loss(p, b, cfg, **kw),
             prefill=_encdec_prefill(cfg),
-            decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
+            decode_step=lambda p, c, t, pos, **kw: encdec.decode_step(
+                p, c, t, pos, cfg, **kw),
             init_cache=lambda p, batch, max_len, dtype: encdec.init_cache(
                 p, cfg, batch, max_len, dtype),
         )
@@ -53,8 +55,10 @@ def build_model(cfg: ModelConfig) -> Model:
         cfg=cfg,
         init=lambda key: transformer.init(key, cfg),
         loss=lambda p, b, **kw: transformer.lm_loss(p, b, cfg, **kw),
-        prefill=lambda p, c, b: transformer.prefill(p, c, b["tokens"], cfg),
-        decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
+        prefill=lambda p, c, b: transformer.prefill(
+            p, c, b["tokens"], cfg, lengths=b.get("lengths")),
+        decode_step=lambda p, c, t, pos, **kw: transformer.decode_step(
+            p, c, t, pos, cfg, **kw),
         init_cache=lambda p, batch, max_len, dtype: transformer.init_cache(
             p, cfg, batch, max_len, dtype),
     )
@@ -66,13 +70,23 @@ def _encdec_prefill(cfg):
             return encdec.prefill_parallel(params, cache, batch, cfg)
         memory = encdec.encode(params, batch["frames"], cfg, remat="none")
         cache = dict(cache, memory=memory.astype(cache["memory"].dtype))
-        # baseline: run prompt tokens through decode steps one at a time
+        # baseline: run prompt tokens through decode steps one at a time;
+        # ragged prompts (batch["lengths"]) gate each row's writes past its
+        # true length and gather its logits at step lengths-1
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
 
         def step(carry, t):
             c, pos = carry
-            logits, nc = encdec.decode_step(params, c, t[:, None], pos, cfg)
+            wm = None if lengths is None else pos < lengths
+            logits, nc = encdec.decode_step(params, c, t[:, None], pos, cfg,
+                                            write_mask=wm)
             return (nc, pos + 1), logits
-        (cache, n), logits = jax.lax.scan(step, (cache, 0), tokens.T)
+        (cache, n), logits = jax.lax.scan(
+            step, (cache, jnp.zeros((), jnp.int32)), tokens.T)
+        if lengths is not None:  # (S, B, 1, V) -> each row's step len-1
+            lg = jnp.take_along_axis(logits[:, :, 0, :],
+                                     (lengths - 1)[None, :, None], axis=0)
+            return lg.transpose(1, 0, 2), cache, tokens.shape[1]
         return logits[-1], cache, tokens.shape[1]
     return fn

@@ -51,13 +51,24 @@ def _block_init(key, cfg):
 
 
 def _block_apply(p, x, cfg, positions, *, causal=True, decode_cache=None,
-                 pos_offset=0, kv_len_mask=None):
-    """Returns (x, aux, new_cache)."""
+                 pos_offset=0, kv_len_mask=None, write_mask=None):
+    """Returns (x, aux, new_cache).
+
+    ``pos_offset`` may be a (B,) vector (ragged decode: each row writes its
+    KV at its own position) and ``write_mask`` (B,) gates the cache write per
+    row — the slot-pool contract (finished slots stop mutating their cache).
+    """
     _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
     h = norm_fn(p["norms"]["pre_attn"], x)
     q, k, v = attn.qkv_proj(p["attn"], h, h, cfg, positions, positions)
     if decode_cache is not None:
-        cache = attn.cache_update(decode_cache, k, v, pos_offset)
+        if jnp.ndim(pos_offset) >= 1 or write_mask is not None:
+            pos_b = jnp.broadcast_to(jnp.asarray(pos_offset, jnp.int32),
+                                     (x.shape[0],))
+            cache = attn.cache_update_ragged(decode_cache, k, v, pos_b,
+                                             write_mask)
+        else:
+            cache = attn.cache_update(decode_cache, k, v, pos_offset)
         # masked decode goes through the decode dispatch: with
         # attn_mode="kernel" this is the split-K fused Pallas path, reading
         # fp2fx8 cache raws directly when the cache is quantized
@@ -81,11 +92,17 @@ def _mamba_block_init(key, cfg):
     return {"norm": norm_p, "ssm": ssm_mod.ssm_init(ks[1], cfg, cfg.pdtype)}
 
 
-def _mamba_block_apply(p, x, cfg, *, decode_cache=None):
+def _mamba_block_apply(p, x, cfg, *, decode_cache=None, write_mask=None):
     _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
     h = norm_fn(p["norm"], x)
     if decode_cache is not None:
         y, cache = ssm_mod.ssm_decode(p["ssm"], h, decode_cache, cfg)
+        if write_mask is not None:  # inactive rows keep their old state
+            cache = jax.tree.map(
+                lambda n, o: jnp.where(
+                    write_mask.reshape((-1,) + (1,) * (n.ndim - 1)),
+                    n, o.astype(n.dtype)),
+                cache, decode_cache)
         return x + y, cache
     return x + ssm_mod.ssm_train(p["ssm"], h, cfg), None
 
@@ -258,32 +275,39 @@ def init_cache(params, cfg, batch, max_len, dtype):
     raise ValueError(cfg.family)
 
 
-def decode_step(params, cache, tokens1, pos, cfg):
-    """One decode step. tokens1: (B,1); pos: scalar int (current length).
+def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
+    """One decode step. tokens1: (B,1); pos: scalar int (current length) OR
+    a (B,) vector of per-row lengths (ragged decode: every row attends over
+    its own prefix and writes its KV at its own position).
 
     Returns (logits (B,1,V), new cache).  Attention layers append to their
     KV cache at ``pos`` and attend over [0, pos]; SSM layers update state.
+    ``write_mask`` (B,) bool gates all cache/state writes per row — inactive
+    slot-pool rows compute (masked, discarded) but never mutate their cache.
     """
     B = tokens1.shape[0]
     x = embed_lookup(params["embed"], tokens1).astype(cfg.cdtype)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = (jnp.asarray(pos, jnp.int32).reshape(B, 1)
+                 if jnp.ndim(pos) >= 1 else jnp.full((B, 1), pos, jnp.int32))
 
     if cfg.family in ("dense", "moe", "vlm"):
         max_len = cache["blocks"]["k"].shape[3]
-        kv_mask = (jnp.arange(max_len) <= pos)[None, :].repeat(B, 0)
+        kv_mask = jnp.arange(max_len)[None, :] <= positions
 
         def body(carry, xs_):
             lp, lc = xs_
             y, _, nc = _block_apply(lp, carry, cfg, positions, causal=False,
                                     decode_cache=lc, pos_offset=pos,
-                                    kv_len_mask=kv_mask)
+                                    kv_len_mask=kv_mask,
+                                    write_mask=write_mask)
             return y, nc
         x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
         cache = {"blocks": new_cache}
     elif cfg.family == "ssm":
         def body(carry, xs_):
             lp, lc = xs_
-            y, nc = _mamba_block_apply(lp, carry, cfg, decode_cache=lc)
+            y, nc = _mamba_block_apply(lp, carry, cfg, decode_cache=lc,
+                                       write_mask=write_mask)
             return y, nc
         x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
         cache = {"blocks": new_cache}
@@ -291,14 +315,15 @@ def decode_step(params, cache, tokens1, pos, cfg):
         shared = params["shared_attn"]
         sc = cache["shared_attn"]  # stacked (ninv, B, Hkv, S, D)
         max_len = sc["k"].shape[3]
-        kv_mask = (jnp.arange(max_len) <= pos)[None, :].repeat(B, 0)
+        kv_mask = jnp.arange(max_len)[None, :] <= positions
         flags = _hybrid_attn_flags(cfg)
         inv_idx = _hybrid_inv_idx(cfg)
 
         def body(carry, xs_):
             lp, lc, flag, inv = xs_
             x_c, shared_cache = carry
-            y, nc = _mamba_block_apply(lp, x_c, cfg, decode_cache=lc)
+            y, nc = _mamba_block_apply(lp, x_c, cfg, decode_cache=lc,
+                                       write_mask=write_mask)
 
             def with_attn(args):
                 q, scache = args
@@ -309,7 +334,8 @@ def decode_step(params, cache, tokens1, pos, cfg):
                     scache)
                 o, _, nsc = _block_apply(shared, q, cfg, positions,
                                          causal=False, decode_cache=my,
-                                         pos_offset=pos, kv_len_mask=kv_mask)
+                                         pos_offset=pos, kv_len_mask=kv_mask,
+                                         write_mask=write_mask)
                 scache = jax.tree.map(
                     lambda c, n: jax.lax.dynamic_update_index_in_dim(
                         c, n.astype(c.dtype), inv_c, 0), scache, nsc)
@@ -328,25 +354,38 @@ def decode_step(params, cache, tokens1, pos, cfg):
     return logits_fn(params, x, cfg), cache
 
 
-def prefill(params, cache, tokens, cfg):
+def prefill(params, cache, tokens, cfg, lengths=None):
     """Fill the cache with a prompt; returns (last logits, cache, length).
 
     Attention-family models recompute K/V for the prompt in one pass and
     write them into the cache; SSM/hybrid run token-by-token state updates
     via ``decode_step`` semantics in a scan (cheap: O(S) with O(1) state).
+
+    ``lengths`` (B,) enables *ragged* prefill: ``tokens`` is right-padded to
+    a common S, each row's true prompt length is ``lengths[b]``, and the
+    returned logits are taken at each row's position ``lengths[b] - 1``.
+    The padded tail positions receive garbage K/V, but every consumer masks
+    the cache with the ``kv_len_mask`` contract (``arange <= pos``), and
+    decode overwrites a tail position in the same step that first exposes
+    it — the garbage is never read.  SSM/hybrid gate their state updates per
+    row instead (padded steps are no-ops), so the recurrent state is exactly
+    the state after each row's true prompt.
     """
     B, S = tokens.shape
     if cfg.family in ("dense", "moe", "vlm"):
         x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+        kv_mask = (None if lengths is None
+                   else jnp.arange(S)[None, :] < lengths[:, None])
 
         def body(carry, xs_):
             lp, lc = xs_
             h = norm_fn(lp["norms"]["pre_attn"], carry)
             q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
             nc = attn.cache_update(lc, k, v, 0)
-            o = attn.attention_fwd(q, k, v, cfg, causal=True)
+            o = attn.attention_fwd(q, k, v, cfg, causal=True,
+                                   kv_len_mask=kv_mask)
             y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
             h2 = norm_fn(lp["norms"]["pre_mlp"], y)
             if "moe" in lp:
@@ -356,20 +395,34 @@ def prefill(params, cache, tokens, cfg):
             return y + z.astype(y.dtype), nc
         x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
         cache = {"blocks": new_cache}
+        if lengths is not None:  # per-row last real position, then norm
+            x = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+            x = norm_fn(params["final_norm"], x)
+            return logits_fn(params, x, cfg), cache, S
         x = norm_fn(params["final_norm"], x)
         return logits_fn(params, x[:, -1:], cfg), cache, S
 
-    if (cfg.parallel_prefill and cfg.family in ("ssm", "hybrid")
+    if (lengths is None and cfg.parallel_prefill
+            and cfg.family in ("ssm", "hybrid")
             and S % cfg.ssm_chunk == 0):  # padded tails would poison the state
         return _prefill_ssm_parallel(params, cache, tokens, cfg)
 
     # ssm / hybrid: naive sequential state build-up (baseline; see
-    # parallel_prefill for the one-pass chunked-SSD fill — §Perf lever)
+    # parallel_prefill for the one-pass chunked-SSD fill — §Perf lever).
+    # Ragged prompts gate each step per row: once a row runs past its true
+    # length the write_mask freezes its state/KV, so padding is a no-op.
     def step(carry, t):
         cache_c, pos = carry
-        logits, nc = decode_step(params, cache_c, t[:, None], pos, cfg)
+        wm = None if lengths is None else pos < lengths
+        logits, nc = decode_step(params, cache_c, t[:, None], pos, cfg,
+                                 write_mask=wm)
         return (nc, pos + 1), logits
-    (cache, _), logits = jax.lax.scan(step, (cache, 0), tokens.T)
+    (cache, _), logits = jax.lax.scan(
+        step, (cache, jnp.zeros((), jnp.int32)), tokens.T)
+    if lengths is not None:  # logits: (S, B, 1, V) -> each row's step len-1
+        lg = jnp.take_along_axis(logits[:, :, 0, :],
+                                 (lengths - 1)[None, :, None], axis=0)
+        return lg.transpose(1, 0, 2), cache, S
     return logits[-1], cache, S
 
 

@@ -1,2 +1,4 @@
 from repro.serve.engine import (  # noqa: F401
     build_decode_loop, build_serve_step, generate)
+from repro.serve.scheduler import (  # noqa: F401
+    Completion, Request, SlotPoolEngine, serve)

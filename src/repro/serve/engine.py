@@ -123,7 +123,14 @@ def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
     cache = model.init_cache(params, B, scfg.max_len, scfg.cache_dtype)
     logits, cache, pos = build_prefill(model)(params, cache, batch)
     last = logits[:, -1, :] if logits.ndim == 3 else logits
-    tok = jnp.argmax(last, -1).astype(I32)[:, None]
+    # the FIRST generated token comes from the prefill logits — it must be
+    # sampled too when temperature > 0 (it used to be unconditionally argmax,
+    # which made every decode start greedy)
+    if scfg.temperature > 0:
+        key, sub = jax.random.split(key)
+    else:
+        sub = key
+    tok = _sample(last, sub, scfg.temperature).astype(I32)[:, None]
 
     if scfg.decode_loop == "host":
         out = [tok]

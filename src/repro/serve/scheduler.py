@@ -1,0 +1,450 @@
+"""Continuous-batching scheduler: a slot-pool KV cache serving ragged traffic.
+
+The lockstep ``engine.generate`` path serves ONE rectangular batch: every
+sequence prefills together, decodes for the same horizon, and EOS is
+ignored.  Real traffic is ragged — prompts of different lengths arriving at
+different times, finishing after different numbers of tokens.  This module
+serves that shape of load with three pieces:
+
+  slot pool    — the KV cache is allocated ONCE with a fixed batch (slot)
+                 dimension ``n_slots`` (dense or fp2fx8 layout); per-slot
+                 host state tracks ``length`` (next write position),
+                 ``active``, and the remaining token ``budget``.  A request
+                 occupies a slot for exactly its own lifetime.
+  ragged prefill — queued prompts are right-padded to a bucketed length and
+                 prefilled as one batch (``prefill(..., lengths=...)``); the
+                 per-row ``kv_len_mask`` contract makes padding invisible,
+                 and each row's first token comes from the logits at its own
+                 ``length - 1``.  The prefilled rows are scattered into free
+                 slots while the rest of the pool keeps its cache.
+  masked burst — decode advances ALL slots in one jitted ``lax.scan`` of
+                 ``decode_burst`` steps: each step writes KV at per-slot
+                 positions (``cache_update_ragged``), attends under the
+                 per-slot ``kv_len_mask`` (arange <= length), samples, and
+                 detects EOS / budget exhaustion ON DEVICE — a finished
+                 slot's ``write_mask`` goes False, so it stops mutating its
+                 cache mid-burst while its neighbours keep decoding.  The
+                 host only sees the emitted tokens and the final per-slot
+                 state, frees finished slots, and admits queued requests
+                 into them before the next burst (insertion prefill).
+
+``ServeConfig.scheduler`` picks the admission policy:
+
+  continuous — admit into freed slots mid-decode; EOS (``eos_id``) frees a
+               slot as soon as it fires.
+  lockstep   — drain the whole pool before admitting the next group and
+               ignore EOS: the PR 2 rectangular baseline generalized to
+               ragged prompts, using the *same* burst arithmetic, so a
+               benchmark comparison isolates the scheduling policy.
+
+Greedy (temperature == 0) outputs are token-for-token identical to a solo
+``engine.generate`` run of the same prompt — padding, slot position, and
+pool neighbours are all invisible to a sequence's arithmetic.  The one
+exception is the MoE family: capacity-bounded expert routing dispatches
+tokens batch-globally, so any *batched* serving (this scheduler AND the
+rectangular lockstep engine) couples a sequence's outputs to its
+neighbours' tokens — inherent to dropped-token routing, not to the
+scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.serve import engine
+
+I32 = jnp.int32
+PAD = -1  # emitted-token filler for slots that were idle during a burst step
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is in seconds after ``run()``
+    starts (0 = already queued); requests must be submitted in arrival
+    order."""
+    rid: int
+    tokens: Any                       # (prompt_len,) int token ids
+    max_new: int
+    frames: Any = None                # encdec: (frontend_len, frontend_dim)
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list                      # generated ids (includes EOS if hit)
+    prompt_len: int
+    finished_at: float                # seconds after run() start
+    arrival: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.arrival
+
+
+def _bucket(n: int, lo: int = 4) -> int:
+    """Next power of two >= n (>= lo) — bounds the number of distinct
+    prefill compilations for ragged prompt lengths / admission group sizes."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+_BURST_CACHE: dict = {}
+_SCATTER_CACHE: dict = {}
+_AXES_CACHE: dict = {}
+
+
+def _burst_key_cfg(scfg: ServeConfig) -> ServeConfig:
+    """Burst compilations depend on the decode arithmetic, not the admission
+    policy: lockstep mode ignores EOS, so normalize both fields and let the
+    two schedulers share one compiled burst."""
+    eos = scfg.eos_id if scfg.scheduler == "continuous" else None
+    return dataclasses.replace(scfg, scheduler="", eos_id=eos)
+
+
+def build_burst(model, scfg: ServeConfig, steps: int):
+    """Jit'd (params, cache, tok, lengths, active, budget, key) ->
+    (emitted (steps, slots), cache, tok, lengths, active, budget, key).
+
+    One ``lax.scan`` of ``steps`` masked decode steps.  Every slot computes
+    every step (uniform shapes), but only active slots write their KV
+    (``write_mask``), consume budget, advance their length, or emit a token
+    (idle rows emit PAD).  EOS and budget exhaustion flip ``active`` on
+    device; the freed slot's cache is untouched from that step on.
+    """
+    kcfg = _burst_key_cfg(scfg)
+    eos = kcfg.eos_id
+    ck = (model.cfg, kcfg, steps)
+    if ck in _BURST_CACHE:
+        return _BURST_CACHE[ck]
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def burst(params, cache, tok, lengths, active, budget, key):
+        def body(carry, _):
+            cache_c, tok_c, len_c, act_c, bud_c, key_c = carry
+            if scfg.temperature > 0:
+                key_c, sub = jax.random.split(key_c)
+            else:
+                sub = key_c
+            logits, cache_c = model.decode_step(params, cache_c, tok_c, len_c,
+                                                write_mask=act_c)
+            nxt = engine._sample(logits[:, -1, :], sub,
+                                 scfg.temperature).astype(I32)
+            emit = jnp.where(act_c, nxt, PAD)
+            bud_c = bud_c - act_c.astype(I32)
+            len_c = len_c + act_c.astype(I32)
+            alive = act_c & (bud_c > 0)
+            if eos is not None:
+                alive = alive & (nxt != eos)
+            tok_c = jnp.where(act_c, nxt, tok_c[:, 0])[:, None]
+            return (cache_c, tok_c, len_c, alive, bud_c, key_c), emit
+
+        carry, emits = jax.lax.scan(
+            body, (cache, tok, lengths, active, budget, key), None,
+            length=steps)
+        cache, tok, lengths, active, budget, key = carry
+        # returning the cache gives the donated input buffers an output to
+        # alias with (true in-place burst on TPU)
+        return emits, cache, tok, lengths, active, budget, key
+
+    return engine._cache_put(_BURST_CACHE, ck, burst)
+
+
+def _cache_batch_axes(model, params, max_len, dtype):
+    """Per-leaf slot (batch) axis of the serving cache, discovered by
+    diffing the abstract shapes at two batch sizes — layer-stacked leaves
+    carry the batch on axis 1, the encoder memory on axis 0, etc."""
+    ck = (model.cfg, max_len, str(dtype))
+    if ck in _AXES_CACHE:
+        return _AXES_CACHE[ck]
+    s1 = jax.eval_shape(
+        functools.partial(model.init_cache, params, 1, max_len, dtype))
+    s2 = jax.eval_shape(
+        functools.partial(model.init_cache, params, 2, max_len, dtype))
+
+    def ax(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch axis in cache leaf {a.shape}")
+
+    return engine._cache_put(_AXES_CACHE, ck, jax.tree.map(ax, s1, s2))
+
+
+def build_scatter(model, axes, max_len, dtype):
+    """Jit'd (pool, new, slot_idx) -> pool with ``new``'s first
+    ``len(slot_idx)`` batch rows written into the pool's slots.  The pool is
+    donated — admission rewrites the slot rows in place."""
+    ck = (model.cfg, max_len, str(dtype))
+    if ck in _SCATTER_CACHE:
+        return _SCATTER_CACHE[ck]
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def scatter(pool, new, slot_idx):
+        # slot_idx is always padded to n_slots rows (duplicates carry the
+        # same payload, so repeated writes are benign) — ONE compilation
+        # regardless of how many slots an admission actually fills
+        def s(p, n, ax):
+            pm = jnp.moveaxis(p, ax, 0)
+            nm = jnp.moveaxis(n, ax, 0)
+            pm = pm.at[slot_idx].set(nm.astype(pm.dtype))
+            return jnp.moveaxis(pm, 0, ax)
+
+        return jax.tree.map(s, pool, new, axes)
+
+    return engine._cache_put(_SCATTER_CACHE, ck, scatter)
+
+
+class SlotPoolEngine:
+    """Host-side scheduler around the slot-pool cache and the jitted burst.
+
+    Pool state lives as numpy mirrors (tiny vectors) updated from each
+    burst's outputs; the KV cache itself never leaves the device and is
+    donated through every burst/scatter call.
+    """
+
+    def __init__(self, model, params, scfg: ServeConfig, key=None):
+        from repro.models import resolve_attn_mode
+        self.model = resolve_attn_mode(model, scfg.attn_mode)
+        self.params = params
+        self.scfg = scfg
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        n = scfg.n_slots
+        self.cache = self.model.init_cache(params, n, scfg.max_len,
+                                           scfg.cache_dtype)
+        self.lengths = np.zeros(n, np.int32)
+        self.active = np.zeros(n, bool)
+        self.budget = np.zeros(n, np.int32)
+        self.last_tok = np.zeros(n, np.int32)
+        self.slot_rid: list[Optional[int]] = [None] * n
+        self.outputs: dict[int, list] = {}
+        self.requests: dict[int, Request] = {}
+        self.completions: dict[int, Completion] = {}
+        self._axes = _cache_batch_axes(self.model, params, scfg.max_len,
+                                       scfg.cache_dtype)
+        self._scatter = build_scatter(self.model, self._axes, scfg.max_len,
+                                      scfg.cache_dtype)
+        self._burst = build_burst(self.model, scfg,
+                                  max(1, scfg.decode_burst))
+        self._eos = scfg.eos_id if scfg.scheduler == "continuous" else None
+        self.stats = {"admitted": 0, "bursts": 0, "prefills": 0,
+                      "burst_steps": 0, "slot_steps_active": 0,
+                      "peak_active": 0, "tokens_emitted": 0}
+
+    # -- warmup --------------------------------------------------------
+
+    def prewarm(self, max_prompt_len: int, frontend=None) -> None:
+        """Compile every executable a run can hit — the burst, the scatter,
+        and the ragged prefill at every (group, prompt) bucket shape.
+
+        Admission shapes depend on arrival timing (how many requests are
+        queued when slots free up), so without this a *timed* run may pay a
+        jit trace mid-flight.  ``frontend``: (frontend_len, frontend_dim)
+        for encdec models.
+        """
+        scfg = self.scfg
+        gs, g = [], 1
+        while g < scfg.n_slots:
+            gs.append(g)
+            g *= 2
+        gs.append(_bucket(scfg.n_slots, lo=1))
+        sps, sp = [], 4
+        while sp < min(_bucket(max_prompt_len), scfg.max_len):
+            sps.append(sp)
+            sp *= 2
+        sps.append(min(_bucket(max_prompt_len), scfg.max_len))
+        prefill = engine.build_prefill(self.model)
+        for g in sorted(set(gs)):
+            for sp in sorted(set(sps)):
+                batch = {"tokens": jnp.zeros((g, sp), I32),
+                         "lengths": jnp.ones((g,), I32)}
+                if frontend is not None:
+                    batch["frames"] = jnp.zeros((g,) + tuple(frontend))
+                fresh = self.model.init_cache(self.params, g, scfg.max_len,
+                                              scfg.cache_dtype)
+                jax.block_until_ready(prefill(self.params, fresh, batch)[0])
+        n = scfg.n_slots
+        fresh = self.model.init_cache(self.params, n, scfg.max_len,
+                                      scfg.cache_dtype)
+        self.cache = self._scatter(self.cache, fresh,
+                                   jnp.arange(n, dtype=I32))
+        out = self._burst(self.params, self.cache, jnp.zeros((n, 1), I32),
+                          jnp.zeros(n, I32), jnp.zeros(n, bool),
+                          jnp.zeros(n, I32), jax.random.PRNGKey(0))
+        self.cache = out[1]
+        jax.block_until_ready(out[0])
+
+    # -- admission -----------------------------------------------------
+
+    def _first_token(self, logits):
+        """Sample (temperature > 0) or argmax the FIRST generated token from
+        the ragged prefill logits — same contract as ``engine.generate``."""
+        last = logits[:, -1, :]
+        if self.scfg.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            return engine._sample(last, sub, self.scfg.temperature)
+        return jnp.argmax(last, -1)
+
+    def admit(self, reqs: list[Request], now: float) -> None:
+        """Ragged group prefill of ``reqs`` + insertion into free slots.
+
+        Prompts are right-padded to a bucketed common length (and the group
+        to a bucketed row count, bounding compilations); row ``b``'s true
+        length rides in ``batch["lengths"]`` per the kv_len_mask contract.
+        Rows whose request is already complete after its first token (EOS or
+        ``max_new == 1``) never occupy a slot.
+        """
+        if not reqs:
+            return
+        free = [s for s in range(self.scfg.n_slots) if not self.active[s]
+                and self.slot_rid[s] is None]
+        assert len(reqs) <= len(free), "admitting more requests than slots"
+        scfg = self.scfg
+        lens = np.array([len(r.tokens) for r in reqs], np.int32)
+        g = _bucket(len(reqs), lo=1)
+        s_pad = min(_bucket(int(lens.max())), scfg.max_len)
+        toks = np.zeros((g, s_pad), np.int32)
+        glens = np.ones(g, np.int32)
+        for b, r in enumerate(reqs):
+            toks[b, :lens[b]] = np.asarray(r.tokens, np.int32)
+        toks[len(reqs):] = toks[0]          # dummy rows: never scattered
+        glens[:len(reqs)] = lens
+        glens[len(reqs):] = lens[0]
+        batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(glens)}
+        if reqs[0].frames is not None:
+            if any(r.frames is None for r in reqs):
+                raise ValueError("mixed group: some requests carry encoder "
+                                 "frames and some do not")
+            fr = np.stack([np.asarray(r.frames) for r in reqs])
+            fr = np.concatenate([fr, np.repeat(fr[:1], g - len(reqs), 0)], 0)
+            batch["frames"] = jnp.asarray(fr)
+
+        fresh = self.model.init_cache(self.params, g, scfg.max_len,
+                                      scfg.cache_dtype)
+        logits, new_cache, _ = engine.build_prefill(self.model)(
+            self.params, fresh, batch)
+        tok0 = np.asarray(self._first_token(logits), np.int32)
+        self.stats["prefills"] += 1
+
+        slot_idx, takers = [], []
+        for b, r in enumerate(reqs):
+            self.requests[r.rid] = r
+            self.outputs[r.rid] = [int(tok0[b])]
+            self.stats["tokens_emitted"] += 1
+            self.stats["admitted"] += 1
+            done = (r.max_new <= 1
+                    or (self._eos is not None and int(tok0[b]) == self._eos))
+            if done:
+                self._finish(r.rid, now)
+                continue
+            s = free[len(takers)]
+            takers.append(b)
+            slot_idx.append(s)
+            self.slot_rid[s] = r.rid
+            self.lengths[s] = lens[b]
+            self.budget[s] = r.max_new - 1
+            self.last_tok[s] = tok0[b]
+            self.active[s] = True
+        if slot_idx:
+            # reorder the prefilled rows so row j lands in slot_idx[j];
+            # pad both index vectors to n_slots (repeating the last pair —
+            # duplicate writes of identical rows) so the jitted scatter
+            # compiles exactly once per pool
+            pad = scfg.n_slots - len(slot_idx)
+            order = np.array(takers + [takers[-1]] * pad, np.int32)
+            slots = np.array(slot_idx + [slot_idx[-1]] * pad, np.int32)
+            picked = jax.tree.map(
+                lambda leaf, ax: jnp.take(leaf, jnp.asarray(order), axis=ax),
+                new_cache, self._axes)
+            self.cache = self._scatter(self.cache, picked,
+                                       jnp.asarray(slots))
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        int(self.active.sum()))
+
+    def _finish(self, rid: int, now: float) -> None:
+        r = self.requests[rid]
+        self.completions[rid] = Completion(
+            rid=rid, tokens=self.outputs[rid], prompt_len=len(r.tokens),
+            finished_at=now, arrival=r.arrival)
+
+    # -- decode --------------------------------------------------------
+
+    def burst(self, now: float) -> None:
+        """One jitted burst of ``decode_burst`` masked steps + host
+        bookkeeping: append emitted tokens, finalize newly freed slots."""
+        was_active = self.active.copy()
+        emits, self.cache, tok, lengths, active, budget, self.key = \
+            self._burst(self.params, self.cache,
+                        jnp.asarray(self.last_tok)[:, None],
+                        jnp.asarray(self.lengths),
+                        jnp.asarray(self.active),
+                        jnp.asarray(self.budget), self.key)
+        emits = np.asarray(emits)                       # (steps, n_slots)
+        # np.array (not asarray): jax exports read-only views, but admission
+        # writes per-slot entries into these host mirrors
+        self.lengths = np.array(lengths)
+        self.active = np.array(active)
+        self.budget = np.array(budget)
+        self.last_tok = np.array(tok)[:, 0]
+        self.stats["bursts"] += 1
+        self.stats["burst_steps"] += emits.shape[0]
+        self.stats["slot_steps_active"] += int((emits != PAD).sum())
+        for s in np.nonzero(was_active)[0]:
+            toks = emits[:, s]
+            toks = toks[toks != PAD].tolist()
+            self.outputs[self.slot_rid[s]].extend(toks)
+            self.stats["tokens_emitted"] += len(toks)
+            if not self.active[s]:                      # freed on device
+                self._finish(self.slot_rid[s], now)
+                self.slot_rid[s] = None
+
+    # -- the serving loop ----------------------------------------------
+
+    def run(self, requests: list[Request]) -> dict[int, Completion]:
+        """Serve ``requests`` (sorted by ``arrival``) to completion."""
+        for r in requests:  # reject malformed requests BEFORE serving any —
+            # a mid-run failure would discard every in-flight completion
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            if len(r.tokens) + r.max_new > self.scfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.tokens)} + max_new "
+                    f"{r.max_new} exceeds max_len {self.scfg.max_len}")
+        queue = deque(sorted(requests, key=lambda r: r.arrival))
+        t0 = time.perf_counter()
+        continuous = self.scfg.scheduler == "continuous"
+        while queue or self.active.any():
+            now = time.perf_counter() - t0
+            free = int((~self.active).sum())  # slot_rid is None iff inactive
+            can_admit = continuous or not self.active.any()
+            batch = []
+            while (can_admit and queue and len(batch) < free
+                   and queue[0].arrival <= now):
+                batch.append(queue.popleft())
+            if batch:
+                self.admit(batch, time.perf_counter() - t0)
+            if not self.active.any():
+                if queue:  # idle: wait for the next arrival
+                    now = time.perf_counter() - t0
+                    time.sleep(max(0.0, min(queue[0].arrival - now, 0.01)))
+                continue
+            self.burst(time.perf_counter() - t0)
+        return self.completions
+
+
+def serve(model, params, requests: list[Request], scfg: ServeConfig,
+          key=None) -> dict[int, Completion]:
+    """One-shot entry: build a slot-pool engine, serve, return completions."""
+    eng = SlotPoolEngine(model, params, scfg, key=key)
+    eng.run(requests)
+    return eng.completions

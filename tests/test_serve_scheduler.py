@@ -1,0 +1,286 @@
+"""Continuous batching: slot-pool scheduler, ragged prefill, EOS early-exit.
+
+The serving contract under test:
+  * ragged parity — every request served through the slot pool (padded
+    prompts, shared cache, insertion prefill, masked bursts) produces
+    token-for-token the same greedy output as a solo ``engine.generate``
+    run of that prompt alone;
+  * EOS frees a slot ON DEVICE and stops its cache writes mid-burst while
+    neighbouring slots keep decoding;
+  * freed slots are reused (more requests than slots);
+  * the pool works over the fp2fx8 int8 KV-cache layout;
+  * the FIRST generated token is sampled when temperature > 0 (it used to
+    be unconditionally argmax) — in ``generate`` and in the scheduler.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+
+F32 = jnp.float32
+
+
+def _setup(arch="qwen2-1.5b", vocab=64, **kw):
+    from repro.configs import get_config, smoke_config
+    from repro.models import build_model
+    from repro.models.layers import unbox
+    cfg = smoke_config(get_config(arch)).with_(
+        softmax_impl="hyft16", vocab=vocab, **kw)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _requests(cfg, n, rng, plen=(3, 9), max_new=(3, 9)):
+    from repro.serve.scheduler import Request
+    reqs = []
+    for rid in range(n):
+        frames = None
+        if cfg.family == "encdec":
+            frames = np.asarray(jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(99), rid),
+                (cfg.frontend_len, cfg.frontend_dim)))
+        reqs.append(Request(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab, int(rng.integers(*plen))).astype(
+                np.int32),
+            max_new=int(rng.integers(*max_new)),
+            frames=frames))
+    return reqs
+
+
+def _solo(model, params, req, scfg, max_new=None):
+    from repro.serve.engine import generate
+    batch = {"tokens": jnp.asarray(req.tokens)[None]}
+    if req.frames is not None:
+        batch["frames"] = jnp.asarray(req.frames)[None]
+    out = generate(model, params, batch, scfg,
+                   max_new=max_new or req.max_new)
+    return np.asarray(out)[0].tolist()
+
+
+# --------------------------------------------------------------------------
+# ragged greedy parity vs solo runs
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-1.5b", "whisper-medium", "mamba2-370m", "zamba2-7b"])
+def test_ragged_parity_matches_solo(arch):
+    """5 ragged requests through a 3-slot pool (queueing + insertion prefill
+    mid-decode) == each prompt's solo greedy run, token for token — across
+    the dense, encdec, SSM (gated recurrent state), and hybrid (shared-attn
+    cache + gated state) families."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup(arch)
+    reqs = _requests(cfg, 5, np.random.default_rng(0))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=3, decode_burst=4)
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    assert eng.stats["admitted"] == 5 and eng.stats["peak_active"] <= 3
+    solo_cfg = ServeConfig(max_len=32, cache_dtype="float32")
+    for r in reqs:
+        got = done[r.rid].tokens
+        assert len(got) == r.max_new
+        assert got == _solo(model, params, r, solo_cfg), f"rid={r.rid}"
+
+
+def test_lockstep_mode_same_outputs():
+    """The drain-between-groups baseline runs the same burst arithmetic:
+    identical greedy outputs, admission policy is the only difference."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 5, np.random.default_rng(1))
+    outs = {}
+    for mode in ("continuous", "lockstep"):
+        scfg = ServeConfig(max_len=32, cache_dtype="float32", scheduler=mode,
+                           n_slots=2, decode_burst=4)
+        eng = SlotPoolEngine(model, params, scfg)
+        done = eng.run(reqs)
+        outs[mode] = {rid: c.tokens for rid, c in done.items()}
+    assert outs["continuous"] == outs["lockstep"]
+
+
+# --------------------------------------------------------------------------
+# EOS early-exit
+# --------------------------------------------------------------------------
+
+
+def test_eos_frees_slot_and_stops_cache_writes():
+    """Pick the EOS id from a probe run so it fires mid-decode for request
+    A; serve A next to a long-running B.  A must stop at its EOS while B
+    runs to budget, and A's cache region past its final length must stay
+    untouched (all zeros) even though B kept decoding — the write_mask
+    gating, not just the host loop exit."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(2)
+    reqs = _requests(cfg, 2, rng, plen=(4, 5), max_new=(12, 13))  # plen=4
+    base = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=4)
+    probe = SlotPoolEngine(model, params, base).run(reqs)
+    eos = probe[0].tokens[2]          # A's 3rd token -> EOS fires mid-decode
+    assert eos not in probe[1].tokens, "degenerate probe: pick another seed"
+
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=4,
+                       eos_id=int(eos))
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    a, b = done[0], done[1]
+    cut = probe[0].tokens.index(eos) + 1
+    assert a.tokens == probe[0].tokens[:cut]      # truncated right after EOS
+    assert a.tokens[-1] == eos
+    assert len(b.tokens) == reqs[1].max_new       # neighbour unaffected
+    assert b.tokens == probe[1].tokens
+
+    # the pool cache beyond A's final length is untouched: prompt 4 tokens
+    # (bucketed pad 4, no padding garbage) + the fed-back tokens; everything
+    # past lengths[slot_a] must still be zero, while B's slot is written
+    # right up to its final length.
+    k = np.asarray(eng.cache["blocks"]["k"])      # (layers, slots, H, L, D)
+    slot_a = 0 if eng.lengths[0] < eng.lengths[1] else 1
+    slot_b = 1 - slot_a
+    la, lb = int(eng.lengths[slot_a]), int(eng.lengths[slot_b])
+    assert la < lb
+    assert np.all(k[:, slot_a, :, la:] == 0.0)
+    assert np.all(np.any(k[:, slot_b, :, :lb] != 0.0, axis=(0, 1, 3)))
+
+
+def test_eos_on_first_token_never_occupies_slot():
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 1, np.random.default_rng(3), max_new=(8, 9))
+    solo = _solo(model, params, reqs[0],
+                 ServeConfig(max_len=32, cache_dtype="float32"))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, eos_id=int(solo[0]))
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    assert done[0].tokens == [solo[0]]
+    assert eng.stats["bursts"] == 0 and not eng.active.any()
+
+
+# --------------------------------------------------------------------------
+# slot reuse / fp2fx8 pool
+# --------------------------------------------------------------------------
+
+
+def test_slot_reuse_after_free():
+    """8 requests through 2 slots: every slot is reused, outputs stay
+    correct, and the pool never exceeds its fixed size."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 8, np.random.default_rng(4), max_new=(2, 6))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=2)
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    assert len(done) == 8
+    assert eng.stats["peak_active"] <= 2
+    assert eng.stats["prefills"] >= 4      # admission waves through 2 slots
+    solo_cfg = ServeConfig(max_len=32, cache_dtype="float32")
+    for r in reqs:
+        assert done[r.rid].tokens == _solo(model, params, r, solo_cfg)
+
+
+def test_moe_pool_runs_valid():
+    """MoE can't promise solo-run parity (capacity-bounded routing is
+    batch-global, for the lockstep engine too — see DESIGN.md §9), but the
+    slot pool must still serve it: full budgets, in-vocab tokens."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup("phi3.5-moe-42b-a6.6b")
+    reqs = _requests(cfg, 4, np.random.default_rng(7))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=4)
+    done = SlotPoolEngine(model, params, scfg).run(reqs)
+    for r in reqs:
+        toks = np.array(done[r.rid].tokens)
+        assert toks.shape[0] == r.max_new
+        assert np.all((toks >= 0) & (toks < cfg.vocab))
+
+
+def test_malformed_requests_rejected_up_front():
+    """max_new < 1 and oversized prompt+budget raise BEFORE any serving."""
+    from repro.serve.scheduler import Request, SlotPoolEngine
+    cfg, model, params = _setup()
+    scfg = ServeConfig(max_len=16, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2)
+    for bad in (Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                        max_new=0),
+                Request(rid=0, tokens=np.arange(10, dtype=np.int32),
+                        max_new=10)):
+        eng = SlotPoolEngine(model, params, scfg)
+        with pytest.raises(ValueError):
+            eng.run([bad])
+        assert eng.stats["admitted"] == 0
+
+
+def test_fp2fx8_slot_pool_parity():
+    """The slot pool over the int8 FP2FX cache layout: quantized solo runs
+    and quantized pool runs agree token for token (same per-(head, position)
+    scales regardless of slot placement)."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 4, np.random.default_rng(5))
+    scfg = ServeConfig(max_len=32, cache_dtype="fp2fx8",
+                       scheduler="continuous", n_slots=2, decode_burst=4)
+    eng = SlotPoolEngine(model, params, scfg)
+    assert eng.cache["blocks"]["k"].dtype == jnp.int8
+    assert "k_scale" in eng.cache["blocks"]
+    done = eng.run(reqs)
+    solo_cfg = ServeConfig(max_len=32, cache_dtype="fp2fx8")
+    for r in reqs:
+        assert done[r.rid].tokens == _solo(model, params, r, solo_cfg)
+
+
+# --------------------------------------------------------------------------
+# first-token sampling (the serve/engine.py:126 bugfix)
+# --------------------------------------------------------------------------
+
+
+def test_first_token_is_sampled_when_temperature_positive():
+    """With temperature > 0 the first generated token must vary across PRNG
+    keys (it used to be argmax of the prefill logits — one value always).
+    ``max_new=1`` exercises the early-return path too."""
+    from repro.serve.engine import generate
+    cfg, model, params = _setup()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0,
+                                          cfg.vocab, jnp.int32)}
+    scfg = ServeConfig(max_len=16, cache_dtype="float32", temperature=50.0)
+    firsts = {int(np.asarray(generate(model, params, batch, scfg, max_new=1,
+                                      key=jax.random.PRNGKey(s)))[0, 0])
+              for s in range(12)}
+    assert len(firsts) > 1, "first token still greedy under temperature"
+    # greedy stays deterministic across keys
+    g = ServeConfig(max_len=16, cache_dtype="float32", temperature=0.0)
+    greedy = {int(np.asarray(generate(model, params, batch, g, max_new=1,
+                                      key=jax.random.PRNGKey(s)))[0, 0])
+              for s in range(4)}
+    assert len(greedy) == 1
+
+
+def test_scheduler_first_token_sampled_and_run_valid():
+    """The scheduler's admission samples the first token too, and a sampled
+    run still completes with every token in-vocab."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 3, np.random.default_rng(6), max_new=(4, 7))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=4,
+                       temperature=50.0)
+    firsts = set()
+    for s in range(8):
+        eng = SlotPoolEngine(model, params, scfg, key=jax.random.PRNGKey(s))
+        done = eng.run(reqs[:1])
+        firsts.add(done[0].tokens[0])
+    assert len(firsts) > 1, "scheduler first token still greedy"
+    eng = SlotPoolEngine(model, params, scfg, key=jax.random.PRNGKey(0))
+    done = eng.run(reqs)
+    for r in reqs:
+        toks = np.array(done[r.rid].tokens)
+        assert toks.shape[0] == r.max_new
+        assert np.all((toks >= 0) & (toks < cfg.vocab))
