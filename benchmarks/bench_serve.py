@@ -1,17 +1,24 @@
-"""Serving benchmark: continuous batching vs lockstep under ragged traffic.
+"""Serving benchmark: continuous vs lockstep, paged+prefix-cache vs dense.
 
-Drives a Poisson-arrival workload with mixed prompt and output lengths
-through ``repro.serve.scheduler`` twice — once with the ``lockstep``
-admission policy (drain the slot pool between groups; the PR 2 rectangular
-baseline generalized to ragged prompts) and once with ``continuous``
-(admit queued requests into freed slots mid-decode).  Both runs share the
-exact same jitted burst/prefill executables, so the comparison isolates the
-scheduling policy: the continuous engine wins exactly as much slot-idle
-time as lockstep wastes running every group to its longest member.
+Two workloads through ``repro.serve.scheduler``:
+
+  mixed-length Poisson — the PR 3 comparison: ``lockstep`` admission (drain
+      the slot pool between groups) vs ``continuous`` (admit into freed
+      slots mid-decode).  Both share the same jitted burst/prefill
+      executables, so the comparison isolates the scheduling policy.
+  shared-prefix — N requests drawn from K distinct system prompts (a long
+      shared head + a short unique tail), served by the dense slot pool and
+      by the paged layout with the radix-trie prefix cache
+      (``kv_layout="paged"``, ``prefix_cache=True``).  The paged engine
+      admits followers by reusing the cached prefix pages and pushes only
+      the unique tail through the model; the benchmark records the
+      prefix-hit rate, peak pages in use, preemption count, and tokens/sec
+      against the dense baseline that re-prefills every prompt in full.
 
 Reports aggregate tokens/sec, request latency p50/p99 (completion − Poisson
 arrival), and mean slot occupancy; results land in ``BENCH_serve.json``
-(CI runs ``--smoke`` and asserts continuous >= lockstep on tokens/sec).
+(CI runs ``--smoke`` and asserts continuous >= lockstep and paged+prefix
+>= dense on their respective workloads).
 
 Absolute numbers are CPU times (Pallas in interpreter mode; on TPU it is
 the compiled path) — read the relative trends.
@@ -50,6 +57,25 @@ def make_workload(cfg, n, rng, plen, new, rate_hz):
         arrival=float(arrivals[i])) for i in range(n)]
 
 
+def make_prefix_workload(cfg, n, k_prompts, rng, prefix_len, tail, new,
+                         rate_hz):
+    """``n`` requests over ``k_prompts`` distinct system prompts: each
+    prompt is a shared ``prefix_len``-token head + a ``tail``-token unique
+    suffix — the shape a prefix cache exists for (the dense baseline
+    re-prefills the shared head for every request)."""
+    from repro.serve.scheduler import Request
+    heads = [rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+             for _ in range(k_prompts)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    return [Request(
+        rid=i,
+        tokens=np.concatenate(
+            [heads[i % k_prompts],
+             rng.integers(0, cfg.vocab, tail).astype(np.int32)]),
+        max_new=int(rng.integers(new[0], new[1] + 1)),
+        arrival=float(arrivals[i])) for i in range(n)]
+
+
 def run_engine(model, params, reqs, scfg):
     from repro.serve.scheduler import SlotPoolEngine
     eng = SlotPoolEngine(model, params, scfg)
@@ -65,16 +91,30 @@ def run_engine(model, params, reqs, scfg):
     st = eng.stats
     occ = (st["slot_steps_active"] /
            max(1, st["burst_steps"] * scfg.n_slots))
-    return {"scheduler": scfg.scheduler, "wall_s": wall, "tokens": tokens,
-            "tokens_per_s": tokens / wall,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "occupancy": occ, "bursts": st["bursts"],
-            "prefills": st["prefills"]}
+    out = {"scheduler": scfg.scheduler, "kv_layout": scfg.kv_layout,
+           "wall_s": wall, "tokens": tokens,
+           "tokens_per_s": tokens / wall,
+           "p50_ms": float(np.percentile(lat, 50) * 1e3),
+           "p99_ms": float(np.percentile(lat, 99) * 1e3),
+           "occupancy": occ, "bursts": st["bursts"],
+           "prefills": st["prefills"],
+           "prefill_tokens": st["prefill_tokens"]}
+    if scfg.kv_layout == "paged":
+        out.update(
+            prefix_hit_rate=st["cached_tokens"] / max(1, st["prompt_tokens"]),
+            cached_tokens=st["cached_tokens"],
+            pages_peak=st["pages_peak"],
+            preemptions=st["preemptions"])
+    return out
 
 
-def run(report, smoke: bool = False):
-    """Returns the machine-readable results dict (also printed as CSV)."""
+def run(report, smoke: bool = False, prefix_only: bool = False):
+    """Returns the machine-readable results dict (also printed as CSV).
+
+    ``prefix_only`` skips the mixed-length Poisson section (the paged-serve
+    CI job asserts only on the shared-prefix comparison — no need to pay
+    for the scheduler-policy benchmark twice per CI run).
+    """
     from repro.configs.base import ServeConfig
     cfg, model, params = _build()
     # arrival rate is set well above the service rate so a queue builds —
@@ -85,28 +125,69 @@ def run(report, smoke: bool = False):
     else:
         n, plen, new, rate, slots, burst = 32, (4, 16), (8, 128), 100.0, 8, 8
     rng = np.random.default_rng(0)
-    reqs = make_workload(cfg, n, rng, plen, new, rate)
-    max_len = plen[1] + new[1] + 1
-    workload = {"requests": n, "prompt_len": list(plen), "max_new": list(new),
-                "poisson_rate_hz": rate, "n_slots": slots,
-                "decode_burst": burst,
-                "total_tokens": sum(r.max_new for r in reqs)}
-    report(f"bench_serve,workload,requests={n},prompts={plen},new={new},"
-           f"slots={slots}")
+    results: dict = {}
+    if not prefix_only:
+        reqs = make_workload(cfg, n, rng, plen, new, rate)
+        max_len = plen[1] + new[1] + 1
+        results["workload"] = {
+            "requests": n, "prompt_len": list(plen), "max_new": list(new),
+            "poisson_rate_hz": rate, "n_slots": slots,
+            "decode_burst": burst,
+            "total_tokens": sum(r.max_new for r in reqs)}
+        report(f"bench_serve,workload,requests={n},prompts={plen},"
+               f"new={new},slots={slots}")
+        results["engines"] = {}
+        for mode in ("lockstep", "continuous"):
+            scfg = ServeConfig(max_len=max_len, cache_dtype="float32",
+                               scheduler=mode, n_slots=slots,
+                               decode_burst=burst)
+            r = run_engine(model, params, reqs, scfg)
+            results["engines"][mode] = r
+            report(f"bench_serve,{mode},"
+                   f"tokens_per_s={r['tokens_per_s']:.1f},"
+                   f"p50_ms={r['p50_ms']:.0f},p99_ms={r['p99_ms']:.0f},"
+                   f"occupancy={r['occupancy']:.2f}")
+        speed = (results["engines"]["continuous"]["tokens_per_s"] /
+                 results["engines"]["lockstep"]["tokens_per_s"])
+        results["continuous_vs_lockstep"] = speed
+        report(f"bench_serve,speedup,continuous_vs_lockstep={speed:.2f}")
 
-    results = {"workload": workload, "engines": {}}
-    for mode in ("lockstep", "continuous"):
-        scfg = ServeConfig(max_len=max_len, cache_dtype="float32",
-                           scheduler=mode, n_slots=slots, decode_burst=burst)
-        r = run_engine(model, params, reqs, scfg)
-        results["engines"][mode] = r
-        report(f"bench_serve,{mode},tokens_per_s={r['tokens_per_s']:.1f},"
-               f"p50_ms={r['p50_ms']:.0f},p99_ms={r['p99_ms']:.0f},"
-               f"occupancy={r['occupancy']:.2f}")
-    speed = (results["engines"]["continuous"]["tokens_per_s"] /
-             results["engines"]["lockstep"]["tokens_per_s"])
-    results["continuous_vs_lockstep"] = speed
-    report(f"bench_serve,speedup,continuous_vs_lockstep={speed:.2f}")
+    # ---- shared-prefix workload: paged + prefix cache vs dense ----------
+    if smoke:
+        pn, kpr, pref, tail, pnew, prate, pslots = 12, 2, 48, 4, (4, 12), \
+            200.0, 4
+    else:
+        pn, kpr, pref, tail, pnew, prate, pslots = 32, 3, 96, 8, (8, 32), \
+            100.0, 8
+    preqs = make_prefix_workload(cfg, pn, kpr, rng, pref, tail, pnew, prate)
+    pmax_len = pref + tail + pnew[1] + 1
+    results["prefix_workload"] = {
+        "requests": pn, "distinct_prompts": kpr, "prefix_len": pref,
+        "tail_len": tail, "max_new": list(pnew), "poisson_rate_hz": prate,
+        "n_slots": pslots, "page_size": 16,
+        "total_tokens": sum(r.max_new for r in preqs)}
+    report(f"bench_serve,prefix_workload,requests={pn},prompts={kpr},"
+           f"prefix={pref},tail={tail}")
+    results["prefix_engines"] = {}
+    for name, kw in (("dense", dict(kv_layout="dense")),
+                     ("paged_prefix", dict(kv_layout="paged", page_size=16,
+                                           prefix_cache=True))):
+        scfg = ServeConfig(max_len=pmax_len, cache_dtype="float32",
+                           scheduler="continuous", n_slots=pslots,
+                           decode_burst=burst, **kw)
+        r = run_engine(model, params, preqs, scfg)
+        results["prefix_engines"][name] = r
+        extra = (f",hit_rate={r['prefix_hit_rate']:.2f},"
+                 f"pages_peak={r['pages_peak']},"
+                 f"preemptions={r['preemptions']}"
+                 if name == "paged_prefix" else "")
+        report(f"bench_serve,prefix_{name},"
+               f"tokens_per_s={r['tokens_per_s']:.1f},"
+               f"prefill_tokens={r['prefill_tokens']}{extra}")
+    pspeed = (results["prefix_engines"]["paged_prefix"]["tokens_per_s"] /
+              results["prefix_engines"]["dense"]["tokens_per_s"])
+    results["paged_prefix_vs_dense"] = pspeed
+    report(f"bench_serve,speedup,paged_prefix_vs_dense={pspeed:.2f}")
     return results
 
 
@@ -118,8 +199,11 @@ if __name__ == "__main__":
     ap.add_argument("--json", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: smaller workload, shorter horizons")
+    ap.add_argument("--prefix-only", action="store_true",
+                    help="run only the shared-prefix (paged vs dense) "
+                         "section, skipping the Poisson scheduler comparison")
     args = ap.parse_args()
-    res = run(print, smoke=args.smoke)
+    res = run(print, smoke=args.smoke, prefix_only=args.prefix_only)
     with open(args.json, "w") as f:
         json.dump(res, f, indent=2)
     print(f"# wrote {args.json}")

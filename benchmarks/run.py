@@ -23,7 +23,7 @@ def main() -> None:
     with open("BENCH_decode.json", "w") as f:
         json.dump(decode_results, f, indent=2)
     report("# wrote BENCH_decode.json")
-    report("## Serving: continuous batching vs lockstep (ragged traffic)")
+    report("## Serving: continuous vs lockstep + paged/prefix-cache vs dense")
     serve_results = bench_serve.run(report)
     with open("BENCH_serve.json", "w") as f:
         json.dump(serve_results, f, indent=2)

@@ -1,23 +1,72 @@
-"""Serve a small model with batched requests: prefill + greedy decode,
-with the Hyft softmax in every attention layer and the router.
+"""Continuous-batching serving tour: slot pool, paged KV pages, prefix cache.
+
+Eight ragged requests drawn from two shared system prompts go through the
+continuous-batching scheduler three ways:
+
+  dense        — the slot-pool KV cache (one max_len stripe per slot)
+  paged        — fixed-size KV pages from a global pool + block tables
+  paged+prefix — pages plus the radix-trie prefix cache: requests sharing
+                 a cached prompt prefix reuse its pages and skip prefill
+                 for the cached tokens (watch ``prefill_tokens`` drop)
+
+Greedy outputs are token-for-token identical across all three (and to a
+solo ``generate`` of each prompt) — layout and caching are invisible to
+the arithmetic.  A plain lockstep ``generate`` run closes the tour.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.configs.base import ServeConfig
 from repro.models import build_model
 from repro.models.layers import unbox
 from repro.serve.engine import generate
+from repro.serve.scheduler import Request, SlotPoolEngine
 
-for arch in ["qwen2-1.5b", "mamba2-370m", "phi3.5-moe-42b-a6.6b"]:
-    cfg = smoke_config(get_config(arch)).with_(softmax_impl="hyft16")
-    model = build_model(cfg)
-    params = unbox(model.init(jax.random.PRNGKey(0)))
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
-                                          cfg.vocab, jnp.int32)}
-    scfg = ServeConfig(max_len=32, cache_dtype="float32")
-    out = generate(model, params, batch, scfg, max_new=8)
-    print(f"{arch:24s} generated {out.shape}: {out[0].tolist()}")
+cfg = smoke_config(get_config("qwen2-1.5b")).with_(softmax_impl="hyft16",
+                                                   vocab=128)
+model = build_model(cfg)
+params = unbox(model.init(jax.random.PRNGKey(0)))
+
+rng = np.random.default_rng(0)
+systems = [rng.integers(0, cfg.vocab, 16).astype(np.int32) for _ in range(2)]
+reqs = [Request(rid=i,
+                tokens=np.concatenate(
+                    [systems[i % 2],
+                     rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+                max_new=int(rng.integers(4, 9)))
+        for i in range(8)]
+
+outs = {}
+for name, kw in (("dense", dict()),
+                 ("paged", dict(kv_layout="paged", page_size=8)),
+                 ("paged+prefix", dict(kv_layout="paged", page_size=8,
+                                       prefix_cache=True))):
+    scfg = ServeConfig(max_len=48, cache_dtype="float32",
+                       scheduler="continuous", n_slots=4, decode_burst=4,
+                       eos_id=None, **kw)
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    outs[name] = {rid: c.tokens for rid, c in done.items()}
+    st = eng.stats
+    paged_info = (f" cached={st['cached_tokens']} hits={st['prefix_hits']}"
+                  f" pages_peak={st['pages_peak']}"
+                  if kw.get("kv_layout") == "paged" else "")
+    print(f"{name:13s} prefill_tokens={st['prefill_tokens']:3d}"
+          f" prefills={st['prefills']}{paged_info}")
+
+assert outs["dense"] == outs["paged"] == outs["paged+prefix"]
+print("all layouts emit identical greedy tokens")
+for rid in sorted(outs["dense"]):
+    print(f"  [{rid}] {outs['dense'][rid]}")
+
+# lockstep rectangular generate, for contrast (one batch, one horizon)
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                      cfg.vocab, jnp.int32)}
+out = generate(model, params, batch, ServeConfig(max_len=32,
+                                                 cache_dtype="float32"),
+               max_new=8)
+print(f"lockstep generate {out.shape}: {out[0].tolist()}")

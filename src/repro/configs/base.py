@@ -128,6 +128,19 @@ class ServeConfig:
     scheduler: str = "lockstep"
     # jitted masked decode steps per burst between host admission checks
     decode_burst: int = 8
+    # --- paged KV cache + prefix caching (repro/serve/kvpool.py, §10) ---
+    # "dense" = one (max_len,) KV stripe per slot; "paged" = fixed-size
+    # pages from a global pool with per-slot block tables (attention
+    # families only; decode appends pages on demand, exhaustion preempts)
+    kv_layout: str = "dense"
+    # tokens per KV page (paged layout)
+    page_size: int = 16
+    # usable pages in the pool (0 = auto: n_slots * ceil(max_len/page_size))
+    n_pages: int = 0
+    # radix-trie prefix cache: admissions sharing a cached prompt prefix
+    # reuse its pages (refcounted, copy-on-write by page granularity) and
+    # skip prefill for the cached tokens (paged layout only)
+    prefix_cache: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -487,6 +487,47 @@ def flash_hyft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 # fused into the kernel's K/V loads so the HBM traffic stays int8.
 
 
+def _decode_tile(q, k, v, maskrow, cfg: HyftConfig, sm_scale: float):
+    """L1 of the decode tree: local Hyft stages 1-2 for one KV split.
+
+    q (gp, dh) — GQA group folded into rows; k/v (bk, dh) fp32 (already
+    dequantized); maskrow (bk,).  Returns (acc (gp, dh), m_loc (gp, 1) raw,
+    l_loc (gp, 1)) — the split-local (max, fixed-sum, acc) stats.  Shared
+    verbatim by the contiguous split-K kernel and the paged kernel, so a
+    page IS a split and the bitwise story reduces to the combine order.
+    """
+    z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * sm_scale
+    z = jnp.where(maskrow[None, :] > 0, z, NEG_BIG)
+    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
+    zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
+    m_loc = jnp.max(zsub, axis=-1, keepdims=True)
+    e, m = nm.exp_unit(z_raw - m_loc, cfg.frac_bits, cfg.mant_bits)
+    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
+    l_loc = jnp.sum(addend, axis=-1, keepdims=True)
+    p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=F32)
+    return acc, m_loc, l_loc
+
+
+def _splitk_combine(acc, m_st, l_st, cfg: HyftConfig):
+    """L2 of the decode tree: merge per-split Hyft stats across the split
+    axis (axis 1) — integer max over split maxima, per-split rescale by the
+    Hyft-approximated exp of the max delta, fixed-point sum merge, one
+    finalize.  acc (BH, ns, gp, D); m_st (BH, ns, gp, 128) i32; l_st f32.
+    Shared by the contiguous and paged decode kernels: identical inputs in
+    identical split order give bitwise-identical outputs.
+    """
+    m_loc = m_st[..., 0]                        # (BH, ns, gp) i32
+    l_loc = l_st[..., 0]                        # (BH, ns, gp) f32
+    m_glob = jnp.max(m_loc, axis=1, keepdims=True)
+    alpha = hyft_alpha(m_loc - m_glob, cfg)     # per-split rescale
+    l_glob = jnp.sum(nm.fx_quantize(l_loc * alpha, cfg.acc_bits), axis=1)
+    acc_glob = jnp.sum(acc * alpha[..., None], axis=1)   # (BH, gp, D)
+    return hyft_finalize(acc_glob, l_glob[..., None], cfg)
+
+
 def _decode_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float,
                        quantized: bool):
     if quantized:
@@ -499,21 +540,7 @@ def _decode_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float,
     if quantized:                         # dequant fused into the load
         k = k * ks_ref[0][:, None]
         v = v * vs_ref[0][:, None]
-    z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=F32) * sm_scale
-    z = jnp.where(mask_ref[0][None, :] > 0, z, NEG_BIG)
-
-    # ---- L1: local Hyft stages 1-2 against the split-local max
-    z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
-    zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
-    m_loc = jnp.max(zsub, axis=-1, keepdims=True)
-    e, m = nm.exp_unit(z_raw - m_loc, cfg.frac_bits, cfg.mant_bits)
-    addend = nm.expfloat_to_fx(e, m, cfg.mant_bits, cfg.acc_bits)
-    l_loc = jnp.sum(addend, axis=-1, keepdims=True)
-    p = ((1 << cfg.mant_bits) + m).astype(F32) * nm.pow2_float(e - cfg.mant_bits)
-    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                              preferred_element_type=F32)
-
+    acc, m_loc, l_loc = _decode_tile(q, k, v, mask_ref[0], cfg, sm_scale)
     acc_ref[...] = acc[None, None]
     m_ref[...] = jnp.broadcast_to(m_loc[None, None], m_ref.shape)
     l_ref[...] = jnp.broadcast_to(l_loc[None, None], l_ref.shape)
@@ -598,11 +625,126 @@ def flash_hyft_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     )(*operands)
 
     # ---- L2: integer-max / fixed-sum tree combine across KV splits
-    m_loc = m_st[..., 0]                        # (BHkv, ns, gp) i32
-    l_loc = l_st[..., 0]                        # (BHkv, ns, gp) f32
-    m_glob = jnp.max(m_loc, axis=1, keepdims=True)
-    alpha = hyft_alpha(m_loc - m_glob, cfg)     # per-split rescale
-    l_glob = jnp.sum(nm.fx_quantize(l_loc * alpha, cfg.acc_bits), axis=1)
-    acc_glob = jnp.sum(acc * alpha[..., None], axis=1)   # (BHkv, gp, D)
-    out = hyft_finalize(acc_glob, l_glob[..., None], cfg)
+    out = _splitk_combine(acc, m_st, l_st, cfg)
+    return out[:, :g].reshape(B, Hkv, g, D).reshape(B, Hq, 1, D)
+
+
+# --------------------------------------------------------------------------
+# paged decode kernel (Sq = 1, block-table K/V gather)
+# --------------------------------------------------------------------------
+#
+# The split-K decode kernel assumes a contiguous (B, Hkv, Sk, D) KV stripe
+# per sequence.  The paged serving layout instead keeps one global pool of
+# fixed-size pages — (n_pages, Hkv, page_size, D), dense or int8 fp2fx8 —
+# and a per-sequence block table mapping virtual KV block j to a physical
+# page.  The kernel below is the same split-K machine with pages as splits:
+# the block table rides in as a scalar-prefetch operand so the BlockSpec
+# index maps can route grid step (b, j) to physical page bt[b, j] (the DMA
+# for page j+1 issues while page j computes — on TPU the gather is free).
+# Each page emits the same local (max, fixed-sum, acc) stats via
+# ``_decode_tile`` and the combine is ``_splitk_combine`` — so with pages
+# laid out sequentially (bt[b, j] == j over a contiguous pool) the result
+# is bitwise identical to ``flash_hyft_decode`` at block_k == page_size.
+
+
+def _paged_decode_kernel(*refs, cfg: HyftConfig, sm_scale: float,
+                         quantized: bool):
+    if quantized:
+        (bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        bt_ref, q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref = refs
+    del bt_ref  # consumed by the index maps (scalar prefetch)
+    q = q_ref[0].astype(F32)              # (gp, dh)
+    k = k_ref[0, 0].astype(F32)           # (ps, dh) — one physical page
+    v = v_ref[0, 0].astype(F32)
+    if quantized:                         # dequant fused into the page load
+        k = k * ks_ref[0, 0][:, None]
+        v = v * vs_ref[0, 0][:, None]
+    acc, m_loc, l_loc = _decode_tile(q, k, v, mask_ref[0], cfg, sm_scale)
+    acc_ref[...] = acc[None, None]
+    m_ref[...] = jnp.broadcast_to(m_loc[None, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_loc[None, None], l_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sm_scale", "interpret"))
+def flash_hyft_decode_paged(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_tables: jax.Array,
+                            cfg: HyftConfig, sm_scale: float | None = None,
+                            interpret: bool = True,
+                            kv_len_mask: jax.Array | None = None,
+                            k_scale: jax.Array | None = None,
+                            v_scale: jax.Array | None = None):
+    """Split-K fused decode attention over a paged KV pool (Sq = 1).
+
+    Args:
+      q: (B, Hq, 1, D);  k_pages, v_pages: (n_pages, Hkv, page_size, D)
+        float — or int8 FP2FX raws with ``k_scale``/``v_scale``
+        (n_pages, Hkv, page_size) fp32 scales (the fp2fx8 page layout),
+        in which case dequantization fuses into the page loads.
+      block_tables: (B, nb) int32 — virtual KV block j of sequence b lives
+        in physical page ``block_tables[b, j]`` (scalar-prefetched so the
+        grid's BlockSpec index maps do the gather).
+      kv_len_mask: optional (B, nb * page_size) validity mask over the
+        *virtual* KV axis (nonzero = valid); missing means all-valid.
+    Returns (B, Hq, 1, D) fp32.  With ``block_tables[b, j] == j`` over a
+    contiguous pool this is bitwise identical to ``flash_hyft_decode`` at
+    ``block_k == page_size`` (same tile arithmetic, same combine order).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, Hq, Sq, D = q.shape
+    _, Hkv, ps, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    assert Sq == 1 and Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    gp = -(-g // 8) * 8  # sublane-aligned group rows
+    Lv = nb * ps         # virtual KV length
+    maskf = (kv_len_mask.astype(F32) if kv_len_mask is not None
+             else jnp.ones((B, Lv), F32))
+
+    q3 = q[:, :, 0, :].reshape(B, Hkv, g, D)
+    q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    q3 = q3.reshape(B * Hkv, gp, D)
+
+    quantized = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, gp, D), lambda b, j, bt: (b, 0, 0)),
+        pl.BlockSpec((1, 1, ps, D),
+                     lambda b, j, bt, h=Hkv: (bt[b // h, j], b % h, 0, 0)),
+        pl.BlockSpec((1, 1, ps, D),
+                     lambda b, j, bt, h=Hkv: (bt[b // h, j], b % h, 0, 0)),
+    ]
+    operands = [q3, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec(
+            (1, 1, ps), lambda b, j, bt, h=Hkv: (bt[b // h, j], b % h, 0))] * 2
+        operands += [k_scale, v_scale]
+    in_specs.append(pl.BlockSpec((1, ps), lambda b, j, bt, h=Hkv: (b // h, j)))
+    operands.append(maskf)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, gp, D), lambda b, j, bt: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, gp, 128), lambda b, j, bt: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, gp, 128), lambda b, j, bt: (b, j, 0, 0)),
+        ],
+    )
+    acc, m_st, l_st = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, cfg=cfg, sm_scale=scale,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, nb, gp, D), F32),
+            jax.ShapeDtypeStruct((B * Hkv, nb, gp, 128), I32),
+            jax.ShapeDtypeStruct((B * Hkv, nb, gp, 128), F32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(I32), *operands)
+
+    out = _splitk_combine(acc, m_st, l_st, cfg)
     return out[:, :g].reshape(B, Hkv, g, D).reshape(B, Hq, 1, D)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.core.hyft import HyftConfig
 from repro.kernels import hyft_softmax as _hk
 from repro.kernels.flash_attention import (  # noqa: F401
-    flash_hyft_attention, flash_hyft_decode)
+    flash_hyft_attention, flash_hyft_decode, flash_hyft_decode_paged)
 
 F32 = jnp.float32
 
@@ -98,3 +98,22 @@ def hyft_decode_attention(q, k, v, cfg: HyftConfig, sm_scale=None,
                              interpret=_auto_interpret(),
                              kv_len_mask=as_mask_f(kv_len_mask),
                              k_scale=k_scale, v_scale=v_scale)
+
+
+def hyft_paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                cfg: HyftConfig, sm_scale=None,
+                                kv_len_mask=None, k_scale=None, v_scale=None):
+    """Split-K fused decode attention over a paged KV pool (Sq = 1).
+
+    The block table is scalar-prefetched so the kernel's index maps gather
+    physical pages directly; each page emits local Hyft (max, fixed-sum,
+    acc) stats and the cross-page combine is the same L1/L2 tree as the
+    contiguous split-K kernel — bitwise-equal to it when pages are laid out
+    sequentially.  Pass int8 pages + ``k_scale``/``v_scale`` pools (the
+    fp2fx8 page layout) to fuse dequantization into the page loads.
+    """
+    return flash_hyft_decode_paged(q, k_pages, v_pages, block_tables, cfg,
+                                   sm_scale=sm_scale,
+                                   interpret=_auto_interpret(),
+                                   kv_len_mask=as_mask_f(kv_len_mask),
+                                   k_scale=k_scale, v_scale=v_scale)

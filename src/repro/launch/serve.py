@@ -38,6 +38,21 @@ def main():
                          "it is freed immediately")
     ap.add_argument("--decode-burst", type=int, default=8,
                     help="jitted decode steps between admission checks")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="'paged' = fixed-size KV pages from a global pool "
+                         "with per-slot block tables (attention families; "
+                         "decode appends pages on demand, exhaustion "
+                         "preempts the lowest-priority slot)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page for --kv-layout paged")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="usable pages in the pool (0 = auto: n_slots * "
+                         "ceil(max_len / page_size))")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-trie prompt prefix cache: admissions "
+                         "sharing a cached prefix reuse its pages and skip "
+                         "prefill for the cached tokens (paged only)")
     ap.add_argument("--batch", type=int, default=4,
                     help="lockstep batch size / continuous request count")
     ap.add_argument("--prefill", type=int, default=16,
@@ -78,9 +93,18 @@ def main():
                        scheduler=args.scheduler,
                        n_slots=args.n_slots,
                        eos_id=args.eos_id,
-                       decode_burst=args.decode_burst)
+                       decode_burst=args.decode_burst,
+                       kv_layout=args.kv_layout,
+                       page_size=args.page_size,
+                       n_pages=args.n_pages,
+                       prefix_cache=args.prefix_cache)
 
-    if args.scheduler == "continuous":
+    # the paged layout and prefix cache live in the slot-pool scheduler, so
+    # those flags route through it even under --scheduler lockstep (the
+    # rectangular generate path below is dense-only and would silently
+    # ignore them)
+    if (args.scheduler == "continuous" or args.kv_layout != "dense"
+            or args.prefix_cache):
         rng = np.random.default_rng(args.seed)
         reqs = []
         for rid in range(args.batch):

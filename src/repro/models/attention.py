@@ -433,6 +433,99 @@ def cache_update_ragged(cache, k_new, v_new, pos_b, write_mask=None):
             "v": up(cache["v"], v_new, pos_b, gate)}
 
 
+# --------------------------------------------------------------------------
+# paged KV cache (block-table indirection over a global page pool)
+# --------------------------------------------------------------------------
+#
+# ``kv_layout="paged"`` (DESIGN.md §10) replaces the per-slot dense stripe
+# with one global pool of fixed-size pages — (n_pages + 1, Hkv, page_size, D)
+# per layer, dense or fp2fx8 — plus a per-sequence block table mapping
+# virtual KV block j to a physical page.  Page 0 is the reserved null page
+# (``repro.serve.kvpool.NULL_PAGE``): masked writes are *redirected* at it
+# instead of gated, so the token scatter never needs a gather-then-rewrite
+# and two rows can never race on a live page (distinct slots own distinct
+# unshared tail pages; shared prefix pages are read-only by construction).
+
+
+def paged_cache_init(cfg, n_pages, page_size, dtype) -> dict[str, Any]:
+    """One layer's page pool: ``n_pages`` usable pages + the null page 0."""
+    shape = (n_pages + 1, cfg.n_kv_heads, page_size, cfg.d_head)
+    if is_fp2fx8(dtype):
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], F32),
+                "v_scale": jnp.zeros(shape[:3], F32)}
+    dtype = jnp.dtype(dtype)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_update_paged(cache, k_new, v_new, pos_b, block_tables,
+                       write_mask=None):
+    """Per-row paged scatter: row ``b``'s (Hkv, 1, D) K/V lands in physical
+    page ``block_tables[b, pos_b[b] // ps]`` at offset ``pos_b[b] % ps``.
+
+    ``write_mask`` (B,) bool redirects masked rows to the null page — their
+    write happens but lands in the sink, so finished slots stop mutating
+    live pages without any gather.
+    """
+    ps = cache["k"].shape[2]
+    blk = pos_b // ps
+    off = pos_b % ps
+    page = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    if write_mask is not None:
+        page = jnp.where(write_mask, page, 0)
+
+    def scat(pool, new):  # new (B, Hkv[, D])
+        return pool.at[page, :, off].set(new.astype(pool.dtype))
+
+    if cache_is_quantized(cache):
+        kr, ks = fp2fx8_quantize(k_new)
+        vr, vs = fp2fx8_quantize(v_new)
+        return {"k": scat(cache["k"], kr[:, :, 0]),
+                "v": scat(cache["v"], vr[:, :, 0]),
+                "k_scale": scat(cache["k_scale"], ks[:, :, 0]),
+                "v_scale": scat(cache["v_scale"], vs[:, :, 0])}
+    return {"k": scat(cache["k"], k_new[:, :, 0]),
+            "v": scat(cache["v"], v_new[:, :, 0])}
+
+
+def paged_gather_kv(cache, block_tables):
+    """Materialize the virtual dense (B, Hkv, nb * ps, D) float K/V of each
+    sequence from its block table — the unfused/chunked fallback; the paged
+    split-K kernel gathers via its index maps instead."""
+
+    def flat(pool):  # (B, nb, Hkv, ps[, D]) -> (B, Hkv, nb * ps[, D])
+        x = jnp.moveaxis(jnp.take(pool, block_tables, axis=0), 2, 1)
+        return x.reshape(x.shape[0], x.shape[1], -1, *x.shape[4:])
+
+    if cache_is_quantized(cache):
+        return (fp2fx8_dequantize(flat(cache["k"]), flat(cache["k_scale"])),
+                fp2fx8_dequantize(flat(cache["v"]), flat(cache["v_scale"])))
+    return flat(cache["k"]), flat(cache["v"])
+
+
+def decode_attention_paged(q, cache, block_tables, cfg, *, kv_len_mask=None):
+    """Sq=1 attention over a paged KV pool — the paged serving fast path.
+
+    With a Hyft softmax and ``attn_mode="kernel"`` this dispatches to the
+    block-table split-K kernel (pages gathered by scalar-prefetched index
+    maps, fp2fx8 dequant fused into the page loads); every other combination
+    materializes the virtual dense K/V and falls through to the regular
+    dispatch, so all three attention modes serve the paged layout.
+    """
+    hcfg = hyft_config_for(cfg.softmax_impl)
+    mode = getattr(cfg, "attn_mode", "unfused")
+    if hcfg is not None and mode == "kernel" and q.shape[2] == 1:
+        from repro.kernels import ops
+        return ops.hyft_paged_decode_attention(
+            q, cache["k"], cache["v"], block_tables, hcfg,
+            kv_len_mask=ops.as_mask_f(kv_len_mask),
+            k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale")).astype(q.dtype)
+    k, v = paged_gather_kv(cache, block_tables)
+    return attention_fwd(q, k, v, cfg, causal=False, kv_len_mask=kv_len_mask)
+
+
 def decode_attention(q, cache, cfg, *, kv_len_mask=None):
     """Sq=1 attention over the KV cache — the serving fast path.
 

@@ -27,6 +27,8 @@ class Model:
     prefill: Callable
     decode_step: Callable
     init_cache: Callable
+    # paged serving cache (attention families only; None = layout unsupported)
+    init_paged_cache: Any = None
 
 
 def resolve_attn_mode(model: Model, attn_mode) -> Model:
@@ -61,6 +63,10 @@ def build_model(cfg: ModelConfig) -> Model:
             p, c, t, pos, cfg, **kw),
         init_cache=lambda p, batch, max_len, dtype: transformer.init_cache(
             p, cfg, batch, max_len, dtype),
+        init_paged_cache=(
+            (lambda p, n_pages, page_size, dtype: transformer.init_paged_cache(
+                p, cfg, n_pages, page_size, dtype))
+            if cfg.family in ("dense", "moe", "vlm") else None),
     )
 
 

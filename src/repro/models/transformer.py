@@ -51,17 +51,28 @@ def _block_init(key, cfg):
 
 
 def _block_apply(p, x, cfg, positions, *, causal=True, decode_cache=None,
-                 pos_offset=0, kv_len_mask=None, write_mask=None):
+                 pos_offset=0, kv_len_mask=None, write_mask=None,
+                 paged_bt=None):
     """Returns (x, aux, new_cache).
 
     ``pos_offset`` may be a (B,) vector (ragged decode: each row writes its
     KV at its own position) and ``write_mask`` (B,) gates the cache write per
     row — the slot-pool contract (finished slots stop mutating their cache).
+    ``paged_bt`` (B, nb) switches the cache to the paged layout: the write
+    scatters through the block table (masked rows redirected to the null
+    page) and attention gathers pages (DESIGN.md §10).
     """
     _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
     h = norm_fn(p["norms"]["pre_attn"], x)
     q, k, v = attn.qkv_proj(p["attn"], h, h, cfg, positions, positions)
-    if decode_cache is not None:
+    if decode_cache is not None and paged_bt is not None:
+        pos_b = jnp.broadcast_to(jnp.asarray(pos_offset, jnp.int32),
+                                 (x.shape[0],))
+        cache = attn.cache_update_paged(decode_cache, k, v, pos_b, paged_bt,
+                                        write_mask)
+        o = attn.decode_attention_paged(q, cache, paged_bt, cfg,
+                                        kv_len_mask=kv_len_mask)
+    elif decode_cache is not None:
         if jnp.ndim(pos_offset) >= 1 or write_mask is not None:
             pos_b = jnp.broadcast_to(jnp.asarray(pos_offset, jnp.int32),
                                      (x.shape[0],))
@@ -275,6 +286,26 @@ def init_cache(params, cfg, batch, max_len, dtype):
     raise ValueError(cfg.family)
 
 
+def init_paged_cache(params, cfg, n_pages, page_size, dtype):
+    """Paged serving cache: per-layer page pools + (no) block tables.
+
+    Returns ``{"blocks": pools}`` with each attention leaf shaped
+    ``(n_layers, n_pages + 1, Hkv, page_size, D)`` (page 0 = the null page).
+    The caller owns the block tables and passes them in the cache dict as
+    ``cache["block_tables"]`` (B, nb) — ``decode_step`` dispatches on their
+    presence.  Attention families only: SSM/hybrid recurrent state is a
+    fixed-size tensor, not a pageable stream (their serving stays dense).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"kv_layout='paged' needs an attention-family model, got "
+            f"family={cfg.family!r} (SSM/hybrid/encdec serve with the dense "
+            f"slot-pool layout)")
+    c = attn.paged_cache_init(cfg, n_pages, page_size, dtype)
+    return {"blocks": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), c)}
+
+
 def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
     """One decode step. tokens1: (B,1); pos: scalar int (current length) OR
     a (B,) vector of per-row lengths (ragged decode: every row attends over
@@ -291,7 +322,11 @@ def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
                  if jnp.ndim(pos) >= 1 else jnp.full((B, 1), pos, jnp.int32))
 
     if cfg.family in ("dense", "moe", "vlm"):
-        max_len = cache["blocks"]["k"].shape[3]
+        bt = cache.get("block_tables")
+        if bt is not None:  # paged: virtual KV length = blocks * page size
+            max_len = bt.shape[1] * cache["blocks"]["k"].shape[3]
+        else:
+            max_len = cache["blocks"]["k"].shape[3]
         kv_mask = jnp.arange(max_len)[None, :] <= positions
 
         def body(carry, xs_):
@@ -299,10 +334,11 @@ def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
             y, _, nc = _block_apply(lp, carry, cfg, positions, causal=False,
                                     decode_cache=lc, pos_offset=pos,
                                     kv_len_mask=kv_mask,
-                                    write_mask=write_mask)
+                                    write_mask=write_mask, paged_bt=bt)
             return y, nc
         x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
-        cache = {"blocks": new_cache}
+        cache = ({"blocks": new_cache} if bt is None
+                 else {"blocks": new_cache, "block_tables": bt})
     elif cfg.family == "ssm":
         def body(carry, xs_):
             lp, lc = xs_

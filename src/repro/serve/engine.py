@@ -113,6 +113,50 @@ def build_decode_loop(model, scfg: ServeConfig, steps: int):
     return _LOOP_CACHE[ck]
 
 
+_TEACHER_CACHE: dict = {}
+
+
+def build_teacher_loop(model, scfg: ServeConfig, steps: int):
+    """Jit'd teacher-forced suffix fill over a (slot-pool) cache.
+
+    (params, cache, toks (B, steps), start (B,), n_valid (B,), gate (B,)) ->
+    (last_logits (B, V), cache).  Step ``i`` feeds ``toks[:, i]`` at
+    position ``start + i`` with the cache write gated by
+    ``gate & (i < n_valid)``; each gated row's logits at its step
+    ``n_valid - 1`` are captured — the next-token logits after its true
+    suffix.  This is the prefix-cache admission path: tokens whose KV pages
+    already exist are skipped entirely, and only the un-cached suffix is
+    pushed through decode steps (the step count is the prefill work
+    actually done).  Rows with ``gate`` False compute but never write —
+    the rest of the pool is untouched.
+    """
+    ck = (model.cfg, scfg, steps)
+    if ck in _TEACHER_CACHE:
+        return _TEACHER_CACHE[ck]
+    vocab = model.cfg.vocab
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def teacher(params, cache, toks, start, n_valid, gate):
+        B = toks.shape[0]
+
+        def body(carry, i):
+            cache_c, out = carry
+            wm = gate & (i < n_valid)
+            logits, cache_c = model.decode_step(params, cache_c,
+                                                toks[:, i][:, None],
+                                                start + i, write_mask=wm)
+            last = logits[:, -1, :]
+            take = (wm & (i == n_valid - 1))[:, None]
+            return (cache_c, jnp.where(take, last, out)), None
+
+        (cache, out), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((B, vocab), jnp.float32)),
+            jnp.arange(steps, dtype=I32))
+        return out, cache
+
+    return _cache_put(_TEACHER_CACHE, ck, teacher)
+
+
 def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
              key=None):
     """Prefill the prompt then decode ``max_new`` tokens. Returns (B, max_new)."""

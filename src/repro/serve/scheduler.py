@@ -37,6 +37,20 @@ serves that shape of load with three pieces:
                ragged prompts, using the *same* burst arithmetic, so a
                benchmark comparison isolates the scheduling policy.
 
+``ServeConfig.kv_layout`` picks the cache layout (DESIGN.md §10):
+
+  dense — one (max_len,) KV stripe per slot (the PR 3 layout): memory
+          scales with the worst case whether or not a request uses it.
+  paged — a global pool of fixed-size pages (``repro.serve.kvpool``) with
+          per-slot block tables: admission allocates just the prompt's
+          pages, decode bursts append pages on demand, exhaustion preempts
+          the lowest-priority slot (requeued through normal admission with
+          its generated tokens folded into the prompt — greedy
+          continuation is identical), and ``prefix_cache`` shares the
+          pages of previously seen prompt prefixes through a radix trie,
+          so cached tokens skip prefill entirely (only the un-cached
+          suffix is pushed through teacher-forced decode steps).
+
 Greedy (temperature == 0) outputs are token-for-token identical to a solo
 ``engine.generate`` run of the same prompt — padding, slot position, and
 pool neighbours are all invisible to a sequence's arithmetic.  The one
@@ -59,7 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
-from repro.serve import engine
+from repro.serve import engine, kvpool
 
 I32 = jnp.int32
 PAD = -1  # emitted-token filler for slots that were idle during a burst step
@@ -75,6 +89,9 @@ class Request:
     max_new: int
     frames: Any = None                # encdec: (frontend_len, frontend_dim)
     arrival: float = 0.0
+    # internal: a preempted request requeued mid-generation (its prompt
+    # already carries the tokens generated so far; outputs are appended)
+    resume: bool = False
 
 
 @dataclasses.dataclass
@@ -205,6 +222,44 @@ def build_scatter(model, axes, max_len, dtype):
     return engine._cache_put(_SCATTER_CACHE, ck, scatter)
 
 
+_PAGECOPY_CACHE: dict = {}
+
+
+def build_page_copy(model, scfg: ServeConfig, g: int, s_pad: int):
+    """Jit'd (pool_blocks, dense_blocks, rows, blks, pages) -> pool_blocks.
+
+    Copies dense prefilled KV into physical pages: entry ``m`` moves dense
+    row ``rows[m]``'s KV block ``blks[m]`` (``page_size`` positions) into
+    page ``pages[m]`` of the pool; padding entries target the null page 0
+    (``repro.serve.kvpool.NULL_PAGE``), so the index vectors have ONE
+    compiled shape per (group, prompt) bucket.  The pool is donated —
+    admission fills pages in place.
+    """
+    ps = scfg.page_size
+    ck = (model.cfg, scfg.cache_dtype, ps, g, s_pad)
+    if ck in _PAGECOPY_CACHE:
+        return _PAGECOPY_CACHE[ck]
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def copy(pool, dense, rows, blks, pages):
+        def leaf(pool_l, dn):
+            # pool_l (L, P, H, ps[, D]); dn (L, g, H, S[, D]) — pad S to a
+            # page multiple, then block the position axis into pages
+            pad = (-dn.shape[3]) % ps
+            if pad:
+                w = [(0, 0)] * dn.ndim
+                w[3] = (0, pad)
+                dn = jnp.pad(dn, w)
+            nb = dn.shape[3] // ps
+            dn = dn.reshape(dn.shape[:3] + (nb, ps) + dn.shape[4:])
+            src = dn[:, rows, :, blks]            # (M, L, H, ps[, D])
+            return pool_l.at[:, pages].set(
+                jnp.moveaxis(src, 0, 1).astype(pool_l.dtype))
+        return jax.tree.map(leaf, pool, dense)
+
+    return engine._cache_put(_PAGECOPY_CACHE, ck, copy)
+
+
 class SlotPoolEngine:
     """Host-side scheduler around the slot-pool cache and the jitted burst.
 
@@ -220,8 +275,37 @@ class SlotPoolEngine:
         self.scfg = scfg
         self.key = key if key is not None else jax.random.PRNGKey(0)
         n = scfg.n_slots
-        self.cache = self.model.init_cache(params, n, scfg.max_len,
-                                           scfg.cache_dtype)
+        if scfg.kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {scfg.kv_layout!r}")
+        self.paged = scfg.kv_layout == "paged"
+        self.trie = None
+        if self.paged:
+            if self.model.init_paged_cache is None:
+                raise ValueError(
+                    "kv_layout='paged' needs an attention-family model "
+                    "(dense/moe/vlm); SSM/hybrid/encdec serve dense")
+            if scfg.page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            self.n_blocks = -(-scfg.max_len // scfg.page_size)
+            n_pages = scfg.n_pages or n * self.n_blocks
+            if n_pages < self.n_blocks:
+                raise ValueError(
+                    f"n_pages={n_pages} cannot hold one max_len={scfg.max_len}"
+                    f" request ({self.n_blocks} pages of {scfg.page_size})")
+            self.pool = kvpool.PagePool(n_pages)
+            if scfg.prefix_cache:
+                self.trie = kvpool.RadixTrie(self.pool, scfg.page_size)
+            self.slot_pages: list[list] = [[] for _ in range(n)]
+            self.block_tables = np.zeros((n, self.n_blocks), np.int32)
+            self.cache = dict(
+                self.model.init_paged_cache(params, n_pages, scfg.page_size,
+                                            scfg.cache_dtype),
+                block_tables=jnp.asarray(self.block_tables))
+        else:
+            if scfg.prefix_cache:
+                raise ValueError("prefix_cache requires kv_layout='paged'")
+            self.cache = self.model.init_cache(params, n, scfg.max_len,
+                                               scfg.cache_dtype)
         self.lengths = np.zeros(n, np.int32)
         self.active = np.zeros(n, bool)
         self.budget = np.zeros(n, np.int32)
@@ -230,16 +314,21 @@ class SlotPoolEngine:
         self.outputs: dict[int, list] = {}
         self.requests: dict[int, Request] = {}
         self.completions: dict[int, Completion] = {}
-        self._axes = _cache_batch_axes(self.model, params, scfg.max_len,
-                                       scfg.cache_dtype)
-        self._scatter = build_scatter(self.model, self._axes, scfg.max_len,
-                                      scfg.cache_dtype)
+        self._queue: deque = deque()
+        if not self.paged:  # admission scatters dense rows into slots
+            self._axes = _cache_batch_axes(self.model, params, scfg.max_len,
+                                           scfg.cache_dtype)
+            self._scatter = build_scatter(self.model, self._axes,
+                                          scfg.max_len, scfg.cache_dtype)
         self._burst = build_burst(self.model, scfg,
                                   max(1, scfg.decode_burst))
         self._eos = scfg.eos_id if scfg.scheduler == "continuous" else None
         self.stats = {"admitted": 0, "bursts": 0, "prefills": 0,
                       "burst_steps": 0, "slot_steps_active": 0,
-                      "peak_active": 0, "tokens_emitted": 0}
+                      "peak_active": 0, "tokens_emitted": 0,
+                      "prompt_tokens": 0, "prefill_tokens": 0,
+                      "cached_tokens": 0, "prefix_hits": 0,
+                      "preemptions": 0, "pages_peak": 0}
 
     # -- warmup --------------------------------------------------------
 
@@ -272,12 +361,33 @@ class SlotPoolEngine:
                     batch["frames"] = jnp.zeros((g,) + tuple(frontend))
                 fresh = self.model.init_cache(self.params, g, scfg.max_len,
                                               scfg.cache_dtype)
-                jax.block_until_ready(prefill(self.params, fresh, batch)[0])
+                _, warm_cache, _ = prefill(self.params, fresh, batch)
+                jax.block_until_ready(jax.tree.leaves(warm_cache)[0])
+                if self.paged:  # the dense-row -> page copy per bucket pair
+                    m = g * (-(-sp // scfg.page_size))
+                    z = jnp.zeros(m, I32)
+                    self.cache["blocks"] = build_page_copy(
+                        self.model, scfg, g, sp)(
+                            self.cache["blocks"], warm_cache["blocks"],
+                            z, z, z)
         n = scfg.n_slots
-        fresh = self.model.init_cache(self.params, n, scfg.max_len,
-                                      scfg.cache_dtype)
-        self.cache = self._scatter(self.cache, fresh,
-                                   jnp.arange(n, dtype=I32))
+        if self.paged:
+            if self.trie is not None:  # teacher suffix buckets (prefix hits)
+                m, m_top = 1, _bucket(max_prompt_len, lo=1)
+                while m <= m_top:
+                    tl = engine.build_teacher_loop(
+                        self.model, _burst_key_cfg(scfg), m)
+                    out, self.cache = tl(
+                        self.params, self.cache, jnp.zeros((n, m), I32),
+                        jnp.zeros(n, I32), jnp.ones(n, I32),
+                        jnp.zeros(n, bool))
+                    jax.block_until_ready(out)
+                    m *= 2
+        else:
+            fresh = self.model.init_cache(self.params, n, scfg.max_len,
+                                          scfg.cache_dtype)
+            self.cache = self._scatter(self.cache, fresh,
+                                       jnp.arange(n, dtype=I32))
         out = self._burst(self.params, self.cache, jnp.zeros((n, 1), I32),
                           jnp.zeros(n, I32), jnp.zeros(n, bool),
                           jnp.zeros(n, I32), jax.random.PRNGKey(0))
@@ -295,20 +405,14 @@ class SlotPoolEngine:
             return engine._sample(last, sub, self.scfg.temperature)
         return jnp.argmax(last, -1)
 
-    def admit(self, reqs: list[Request], now: float) -> None:
-        """Ragged group prefill of ``reqs`` + insertion into free slots.
+    def _group_prefill(self, reqs: list[Request]):
+        """Bucketed ragged group prefill on a fresh dense scratch cache.
 
         Prompts are right-padded to a bucketed common length (and the group
         to a bucketed row count, bounding compilations); row ``b``'s true
         length rides in ``batch["lengths"]`` per the kv_len_mask contract.
-        Rows whose request is already complete after its first token (EOS or
-        ``max_new == 1``) never occupy a slot.
+        Returns (logits, scratch cache, lens).
         """
-        if not reqs:
-            return
-        free = [s for s in range(self.scfg.n_slots) if not self.active[s]
-                and self.slot_rid[s] is None]
-        assert len(reqs) <= len(free), "admitting more requests than slots"
         scfg = self.scfg
         lens = np.array([len(r.tokens) for r in reqs], np.int32)
         g = _bucket(len(reqs), lo=1)
@@ -333,19 +437,53 @@ class SlotPoolEngine:
                                       scfg.cache_dtype)
         logits, new_cache, _ = engine.build_prefill(self.model)(
             self.params, fresh, batch)
-        tok0 = np.asarray(self._first_token(logits), np.int32)
         self.stats["prefills"] += 1
+        return logits, new_cache, lens
+
+    def _record_first(self, r: Request, tok0: int, now: float) -> bool:
+        """First-generated-token bookkeeping (admission or resume).  Returns
+        True when the request is already complete (EOS / budget) and must
+        not occupy a slot."""
+        if not r.resume:
+            self.requests[r.rid] = r
+            self.outputs[r.rid] = []
+            self.stats["admitted"] += 1
+        self.outputs[r.rid].append(tok0)
+        self.stats["tokens_emitted"] += 1
+        done = (r.max_new <= 1
+                or (self._eos is not None and tok0 == self._eos))
+        if done:
+            self._finish(r.rid, now)
+        return done
+
+    def admit(self, reqs: list[Request], now: float) -> None:
+        """Admit ``reqs`` into free slots: ragged group prefill + insertion
+        (dense layout), or page allocation + prefix-cache reuse (paged).
+        Rows whose request is already complete after its first token (EOS
+        or ``max_new == 1``) never occupy a slot.
+        """
+        if not reqs:
+            return
+        free = [s for s in range(self.scfg.n_slots) if not self.active[s]
+                and self.slot_rid[s] is None]
+        assert len(reqs) <= len(free), "admitting more requests than slots"
+        if self.paged:
+            self._admit_paged(reqs, free, now)
+        else:
+            self._admit_dense(reqs, free, now)
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        int(self.active.sum()))
+
+    def _admit_dense(self, reqs, free, now):
+        scfg = self.scfg
+        logits, new_cache, lens = self._group_prefill(reqs)
+        tok0 = np.asarray(self._first_token(logits), np.int32)
+        self.stats["prompt_tokens"] += int(lens.sum())
+        self.stats["prefill_tokens"] += int(lens.sum())
 
         slot_idx, takers = [], []
         for b, r in enumerate(reqs):
-            self.requests[r.rid] = r
-            self.outputs[r.rid] = [int(tok0[b])]
-            self.stats["tokens_emitted"] += 1
-            self.stats["admitted"] += 1
-            done = (r.max_new <= 1
-                    or (self._eos is not None and int(tok0[b]) == self._eos))
-            if done:
-                self._finish(r.rid, now)
+            if self._record_first(r, int(tok0[b]), now):
                 continue
             s = free[len(takers)]
             takers.append(b)
@@ -368,8 +506,221 @@ class SlotPoolEngine:
                 new_cache, self._axes)
             self.cache = self._scatter(self.cache, picked,
                                        jnp.asarray(slots))
-        self.stats["peak_active"] = max(self.stats["peak_active"],
-                                        int(self.active.sum()))
+
+    # -- paged admission (page allocation + prefix cache) --------------
+
+    def _alloc_pages(self, n: int) -> Optional[list]:
+        """``n`` pages from the pool, evicting prefix-cache LRU leaves on
+        shortage.  None when the demand cannot be met even after eviction
+        (the caller requeues or preempts)."""
+        if n <= 0:
+            return []
+        pages = self.pool.alloc(n)
+        if pages is None and self.trie is not None:
+            self.trie.evict(n - self.pool.free_pages)
+            pages = self.pool.alloc(n)
+        return pages
+
+    def _occupy(self, s: int, r: Request, pages: list, length: int,
+                tok0: int) -> None:
+        self.slot_rid[s] = r.rid
+        self.slot_pages[s] = list(pages)
+        self.block_tables[s, :] = 0
+        self.block_tables[s, :len(pages)] = pages
+        self.lengths[s] = length
+        self.budget[s] = r.max_new - 1
+        self.last_tok[s] = tok0
+        self.active[s] = True
+
+    def _release_slot_pages(self, s: int) -> None:
+        for p in self.slot_pages[s]:
+            self.pool.decref(p)
+        self.slot_pages[s] = []
+        self.block_tables[s, :] = 0
+
+    def _admit_paged(self, reqs, free, now):
+        """Paged admission: allocate each prompt's pages (reusing cached
+        prefix pages when the radix trie matches), prefill the cold rows as
+        one dense group and copy them into pages, and push only the
+        un-cached suffix of hit rows through teacher-forced decode steps —
+        the cached tokens never touch the model.
+        """
+        scfg, ps = self.scfg, self.scfg.page_size
+        plans, leftover = [], []
+        for i, r in enumerate(reqs):
+            toks = np.asarray(r.tokens, np.int32)
+            matched_pages: list = []
+            matched = 0
+            if self.trie is not None:
+                # match on tokens[:-1]: at least one suffix token always
+                # remains to produce the first generated token's logits
+                matched_pages, matched = self.trie.match(toks[:-1].tolist())
+                for p in matched_pages:
+                    # pin BEFORE _alloc_pages: its trie eviction would
+                    # otherwise free the just-matched (trie-only) pages and
+                    # could hand them straight back as this request's tail
+                    self.pool.incref(p)
+            need = -(-len(toks) // ps)
+            new = self._alloc_pages(need - len(matched_pages))
+            if new is None and matched_pages:
+                # under pressure the pinned prefix may be the only memory
+                # left: drop the match and admit cold, letting eviction
+                # reclaim it (correct, just uncached)
+                for p in matched_pages:
+                    self.pool.decref(p)
+                matched_pages, matched = [], 0
+                new = self._alloc_pages(need)
+            if new is None:  # page exhaustion: try again after some free up
+                leftover = reqs[i:]
+                break
+            plans.append((r, matched, list(matched_pages) + new))
+        if leftover:
+            self._queue.extendleft(reversed(leftover))
+        if not plans:
+            return
+        for r, matched, _ in plans:
+            self.stats["prompt_tokens"] += len(r.tokens)
+            self.stats["cached_tokens"] += matched
+            self.stats["prefill_tokens"] += len(r.tokens) - matched
+            if matched:
+                self.stats["prefix_hits"] += 1
+
+        cold = [(r, pages) for r, matched, pages in plans if matched == 0]
+        hits = [(r, matched, pages) for r, matched, pages in plans
+                if matched > 0]
+        done_pages: list = []
+
+        if cold:
+            creqs = [r for r, _ in cold]
+            logits, scratch, lens = self._group_prefill(creqs)
+            tok0 = np.asarray(self._first_token(logits), np.int32)
+            # copy each prefilled row's KV blocks into its allocated pages
+            g = _bucket(len(creqs), lo=1)
+            s_pad = min(_bucket(int(lens.max())), scfg.max_len)
+            m_cap = g * (-(-s_pad // ps))
+            rows = np.zeros(m_cap, np.int32)
+            blks = np.zeros(m_cap, np.int32)
+            pgs = np.zeros(m_cap, np.int32)    # default: null page 0
+            m = 0
+            for b, (r, pages) in enumerate(cold):
+                for j in range(-(-int(lens[b]) // ps)):
+                    rows[m], blks[m], pgs[m] = b, j, pages[j]
+                    m += 1
+            self.cache["blocks"] = build_page_copy(
+                self.model, scfg, g, s_pad)(
+                    self.cache["blocks"], scratch["blocks"],
+                    jnp.asarray(rows), jnp.asarray(blks), jnp.asarray(pgs))
+            for b, (r, pages) in enumerate(cold):
+                if self._record_first(r, int(tok0[b]), now):
+                    done_pages.extend(pages)
+                    continue
+                self._occupy(free.pop(0), r, pages, int(lens[b]),
+                             int(tok0[b]))
+
+        if hits:
+            n = scfg.n_slots
+            m_pad = _bucket(max(len(r.tokens) - matched
+                                for r, matched, _ in hits), lo=1)
+            toks_arr = np.zeros((n, m_pad), np.int32)
+            start = np.array(self.lengths, np.int32)
+            n_valid = np.ones(n, np.int32)
+            gate = np.zeros(n, bool)
+            hslots = []
+            for r, matched, pages in hits:
+                s = free.pop(0)
+                hslots.append((r, matched, pages, s))
+                suf = np.asarray(r.tokens, np.int32)[matched:]
+                toks_arr[s, :len(suf)] = suf
+                start[s] = matched
+                n_valid[s] = len(suf)
+                gate[s] = True
+                # the teacher writes through the block table: install it
+                # (and the page ownership) before the scan runs
+                self.slot_pages[s] = list(pages)
+                self.block_tables[s, :] = 0
+                self.block_tables[s, :len(pages)] = pages
+            self.cache["block_tables"] = jnp.asarray(self.block_tables)
+            teacher = engine.build_teacher_loop(
+                self.model, _burst_key_cfg(scfg), m_pad)
+            out_logits, self.cache = teacher(
+                self.params, self.cache, jnp.asarray(toks_arr),
+                jnp.asarray(start), jnp.asarray(n_valid), jnp.asarray(gate))
+            last = np.asarray(
+                self._first_token(out_logits[:, None, :]), np.int32)
+            for r, matched, pages, s in hslots:
+                if self._record_first(r, int(last[s]), now):
+                    done_pages.extend(pages)
+                    self.slot_pages[s] = []
+                    self.block_tables[s, :] = 0
+                    continue
+                self._occupy(s, r, pages, len(r.tokens), int(last[s]))
+
+        if self.trie is not None:
+            # publish every admitted prompt's FULL pages (partial tail
+            # pages are never shared — decode writes into them); insert
+            # before the done-row release so adopted pages survive it
+            for r, _, pages in plans:
+                nfull = len(r.tokens) // ps
+                if nfull:
+                    self.trie.insert(
+                        [int(t) for t in np.asarray(r.tokens)[:nfull * ps]],
+                        pages[:nfull])
+        for p in done_pages:
+            self.pool.decref(p)
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.pool.pages_in_use)
+
+    def _preempt_lowest(self) -> bool:
+        """Page exhaustion mid-decode: free the lowest-priority (latest
+        arrival) active slot and requeue its request through the normal
+        admission path, with the tokens generated so far folded into the
+        prompt — the greedy continuation is token-for-token identical."""
+        cands = [s for s in range(self.scfg.n_slots) if self.active[s]]
+        if not cands:
+            return False
+        s = max(cands, key=lambda c: (self.requests[self.slot_rid[c]].arrival,
+                                      self.slot_rid[c]))
+        rid = self.slot_rid[s]
+        orig = self.requests[rid]
+        toks = np.concatenate([np.asarray(orig.tokens, np.int32),
+                               np.asarray(self.outputs[rid], np.int32)])
+        self._queue.appendleft(Request(
+            rid=rid, tokens=toks, max_new=int(self.budget[s]),
+            frames=orig.frames, arrival=orig.arrival, resume=True))
+        self.active[s] = False
+        self.slot_rid[s] = None
+        self._release_slot_pages(s)
+        self.stats["preemptions"] += 1
+        return True
+
+    def _ensure_burst_pages(self, steps: int) -> None:
+        """Grow every active slot's block table to cover its next ``steps``
+        decode writes.  Exhaustion evicts prefix-cache LRU pages first
+        (inside ``_alloc_pages``), then preempts the lowest-priority slot
+        and retries — the freed pages unblock the rest of the pool."""
+        while True:
+            short = False
+            for s in range(self.scfg.n_slots):
+                if not self.active[s]:
+                    continue
+                horizon = int(self.lengths[s]) + min(steps,
+                                                     int(self.budget[s]))
+                nb_need = min(-(-horizon // self.scfg.page_size),
+                              self.n_blocks)
+                have = len(self.slot_pages[s])
+                new = self._alloc_pages(nb_need - have)
+                if new is None:
+                    short = True
+                    break
+                if new:
+                    self.block_tables[s, have:have + len(new)] = new
+                    self.slot_pages[s].extend(new)
+            if not short:
+                self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                               self.pool.pages_in_use)
+                return
+            if not self._preempt_lowest():
+                return
 
     def _finish(self, rid: int, now: float) -> None:
         r = self.requests[rid]
@@ -381,7 +732,14 @@ class SlotPoolEngine:
 
     def burst(self, now: float) -> None:
         """One jitted burst of ``decode_burst`` masked steps + host
-        bookkeeping: append emitted tokens, finalize newly freed slots."""
+        bookkeeping: append emitted tokens, finalize newly freed slots.
+        Paged mode first appends the pages the burst will write (possibly
+        preempting) and refreshes the device block tables."""
+        if self.paged:
+            self._ensure_burst_pages(max(1, self.scfg.decode_burst))
+            if not self.active.any():  # everyone preempted: nothing to run
+                return
+            self.cache["block_tables"] = jnp.asarray(self.block_tables)
         was_active = self.active.copy()
         emits, self.cache, tok, lengths, active, budget, self.key = \
             self._burst(self.params, self.cache,
@@ -407,6 +765,8 @@ class SlotPoolEngine:
             if not self.active[s]:                      # freed on device
                 self._finish(self.slot_rid[s], now)
                 self.slot_rid[s] = None
+                if self.paged:
+                    self._release_slot_pages(s)
 
     # -- the serving loop ----------------------------------------------
 
@@ -420,7 +780,7 @@ class SlotPoolEngine:
                 raise ValueError(
                     f"request {r.rid}: prompt {len(r.tokens)} + max_new "
                     f"{r.max_new} exceeds max_len {self.scfg.max_len}")
-        queue = deque(sorted(requests, key=lambda r: r.arrival))
+        queue = self._queue = deque(sorted(requests, key=lambda r: r.arrival))
         t0 = time.perf_counter()
         continuous = self.scfg.scheduler == "continuous"
         while queue or self.active.any():
@@ -432,6 +792,7 @@ class SlotPoolEngine:
                    and queue[0].arrival <= now):
                 batch.append(queue.popleft())
             if batch:
+                # page-starved admissions requeue their tail to the front
                 self.admit(batch, time.perf_counter() - t0)
             if not self.active.any():
                 if queue:  # idle: wait for the next arrival
