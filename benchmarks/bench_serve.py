@@ -1,6 +1,7 @@
-"""Serving benchmark: continuous vs lockstep, paged+prefix-cache vs dense.
+"""Serving benchmark: continuous vs lockstep, paged+prefix-cache vs dense,
+speculative vs plain continuous decode.
 
-Two workloads through ``repro.serve.scheduler``:
+Three workloads through ``repro.serve.scheduler``:
 
   mixed-length Poisson — the PR 3 comparison: ``lockstep`` admission (drain
       the slot pool between groups) vs ``continuous`` (admit into freed
@@ -14,6 +15,14 @@ Two workloads through ``repro.serve.scheduler``:
       the unique tail through the model; the benchmark records the
       prefix-hit rate, peak pages in use, preemption count, and tokens/sec
       against the dense baseline that re-prefills every prompt in full.
+  repetitive/agentic — prompts shaped like boilerplate edits / tool-call
+      loops (a short "line" motif tiled several times + a unique tail),
+      the high n-gram-hit-rate regime speculative decoding exists for.
+      Served by plain continuous decode and by ``scheduler="spec"``
+      (n-gram self-drafting, one-call verify bursts); the benchmark
+      records the acceptance rate and tokens-per-model-call alongside
+      tokens/sec.  Greedy outputs are identical by construction, so the
+      comparison isolates the decode strategy.
 
 Reports aggregate tokens/sec, request latency p50/p99 (completion − Poisson
 arrival), and mean slot occupancy; results land in ``BENCH_serve.json``
@@ -21,7 +30,12 @@ arrival), and mean slot occupancy; results land in ``BENCH_serve.json``
 >= dense on their respective workloads).
 
 Absolute numbers are CPU times (Pallas in interpreter mode; on TPU it is
-the compiled path) — read the relative trends.
+the compiled path) — read the relative trends.  Note the FIRST engine run
+in a process pays a one-time runtime warm-up (XLA thread pools, allocator
+arenas — beyond what ``prewarm``'s executable compilation covers), so each
+section is most comparable when run standalone (``--prefix-only`` /
+``--spec-only``, the CI jobs' shape); ``--merge`` lets those standalone
+runs update one shared JSON.
 """
 from __future__ import annotations
 
@@ -76,6 +90,27 @@ def make_prefix_workload(cfg, n, k_prompts, rng, prefix_len, tail, new,
         arrival=float(arrivals[i])) for i in range(n)]
 
 
+def make_repetitive_workload(cfg, n, rng, motif_len, reps, tail, new,
+                             rate_hz):
+    """``n`` requests with code-ish repetitive prompts: a ``motif_len``
+    "line" tiled ``reps`` times + a ``tail``-token unique suffix.  The
+    trailing n-gram of such a context almost always recurs earlier, so the
+    prompt-lookup drafter stays hot — the agentic/templated-output regime
+    speculative decoding targets."""
+    from repro.serve.scheduler import Request
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    reqs = []
+    for i in range(n):
+        motif = rng.integers(0, cfg.vocab, motif_len).astype(np.int32)
+        toks = np.concatenate(
+            [np.tile(motif, reps),
+             rng.integers(0, cfg.vocab, tail).astype(np.int32)])
+        reqs.append(Request(rid=i, tokens=toks,
+                            max_new=int(rng.integers(new[0], new[1] + 1)),
+                            arrival=float(arrivals[i])))
+    return reqs
+
+
 def run_engine(model, params, reqs, scfg):
     from repro.serve.scheduler import SlotPoolEngine
     eng = SlotPoolEngine(model, params, scfg)
@@ -98,7 +133,17 @@ def run_engine(model, params, reqs, scfg):
            "p99_ms": float(np.percentile(lat, 99) * 1e3),
            "occupancy": occ, "bursts": st["bursts"],
            "prefills": st["prefills"],
-           "prefill_tokens": st["prefill_tokens"]}
+           "prefill_tokens": st["prefill_tokens"],
+           "model_calls": st["model_calls"],
+           "tokens_per_model_call": (st["tokens_emitted"] /
+                                     max(1, st["model_calls"]))}
+    if scfg.scheduler == "spec":
+        out.update(
+            acceptance_rate=(st["accepted_tokens"] /
+                             max(1, st["draft_tokens"])),
+            draft_tokens=st["draft_tokens"],
+            accepted_tokens=st["accepted_tokens"],
+            spec_steps=st["spec_steps"])
     if scfg.kv_layout == "paged":
         out.update(
             prefix_hit_rate=st["cached_tokens"] / max(1, st["prompt_tokens"]),
@@ -108,12 +153,14 @@ def run_engine(model, params, reqs, scfg):
     return out
 
 
-def run(report, smoke: bool = False, prefix_only: bool = False):
+def run(report, smoke: bool = False, prefix_only: bool = False,
+        spec_only: bool = False):
     """Returns the machine-readable results dict (also printed as CSV).
 
-    ``prefix_only`` skips the mixed-length Poisson section (the paged-serve
-    CI job asserts only on the shared-prefix comparison — no need to pay
-    for the scheduler-policy benchmark twice per CI run).
+    ``prefix_only`` runs just the shared-prefix section and ``spec_only``
+    just the repetitive/speculative section — the paged-serve and
+    spec-serve CI jobs each assert on one comparison and need not pay for
+    the others.
     """
     from repro.configs.base import ServeConfig
     cfg, model, params = _build()
@@ -124,9 +171,12 @@ def run(report, smoke: bool = False, prefix_only: bool = False):
         n, plen, new, rate, slots, burst = 12, (4, 12), (4, 32), 200.0, 4, 4
     else:
         n, plen, new, rate, slots, burst = 32, (4, 16), (8, 128), 100.0, 8, 8
+    # one dedicated rng per section: a section's workload is identical
+    # whether it runs standalone (--prefix-only/--spec-only, the CI jobs)
+    # or as part of the full sweep, so --merge'd JSONs stay comparable
     rng = np.random.default_rng(0)
     results: dict = {}
-    if not prefix_only:
+    if not prefix_only and not spec_only:
         reqs = make_workload(cfg, n, rng, plen, new, rate)
         max_len = plen[1] + new[1] + 1
         results["workload"] = {
@@ -153,13 +203,18 @@ def run(report, smoke: bool = False, prefix_only: bool = False):
         report(f"bench_serve,speedup,continuous_vs_lockstep={speed:.2f}")
 
     # ---- shared-prefix workload: paged + prefix cache vs dense ----------
+    if spec_only:
+        return _run_spec(report, results, cfg, model, params,
+                         np.random.default_rng(2), smoke, burst)
     if smoke:
         pn, kpr, pref, tail, pnew, prate, pslots = 12, 2, 48, 4, (4, 12), \
             200.0, 4
     else:
         pn, kpr, pref, tail, pnew, prate, pslots = 32, 3, 96, 8, (8, 32), \
             100.0, 8
-    preqs = make_prefix_workload(cfg, pn, kpr, rng, pref, tail, pnew, prate)
+    prng = np.random.default_rng(1)
+    preqs = make_prefix_workload(cfg, pn, kpr, prng, pref, tail, pnew,
+                                 prate)
     pmax_len = pref + tail + pnew[1] + 1
     results["prefix_workload"] = {
         "requests": pn, "distinct_prompts": kpr, "prefix_len": pref,
@@ -188,12 +243,65 @@ def run(report, smoke: bool = False, prefix_only: bool = False):
               results["prefix_engines"]["dense"]["tokens_per_s"])
     results["paged_prefix_vs_dense"] = pspeed
     report(f"bench_serve,speedup,paged_prefix_vs_dense={pspeed:.2f}")
+    if prefix_only:
+        return results
+    return _run_spec(report, results, cfg, model, params,
+                     np.random.default_rng(2), smoke, burst)
+
+
+def _run_spec(report, results, cfg, model, params, rng, smoke, burst):
+    """Repetitive/agentic workload: speculative vs plain continuous decode.
+
+    Both engines share admission policy, slot count, and layout — the only
+    difference is the decode strategy, so tokens/sec isolates what the
+    accepted drafts buy and ``tokens_per_model_call`` shows the
+    amortization directly.
+    """
+    from repro.configs.base import ServeConfig
+    # arrival rate is set high enough that BOTH engines run compute-bound:
+    # spec drains the queue fast enough that at the other sections' rates
+    # it goes arrival-limited and the ratio collapses toward 1 by
+    # construction, not by decode speed
+    if smoke:
+        sn, motif, reps, stail, snew, srate, sslots, skk = \
+            12, 6, 4, 4, (8, 24), 400.0, 4, 4
+    else:
+        sn, motif, reps, stail, snew, srate, sslots, skk = \
+            32, 8, 6, 8, (16, 64), 500.0, 8, 4
+    sreqs = make_repetitive_workload(cfg, sn, rng, motif, reps, stail, snew,
+                                     srate)
+    smax_len = motif * reps + stail + snew[1] + 1
+    results["spec_workload"] = {
+        "requests": sn, "motif_len": motif, "reps": reps, "tail_len": stail,
+        "max_new": list(snew), "poisson_rate_hz": srate, "n_slots": sslots,
+        "draft_k": skk, "total_tokens": sum(r.max_new for r in sreqs)}
+    report(f"bench_serve,spec_workload,requests={sn},motif={motif}x{reps},"
+           f"tail={stail},draft_k={skk}")
+    results["spec_engines"] = {}
+    for name, kw in (("baseline", dict(scheduler="continuous")),
+                     ("spec", dict(scheduler="spec", draft_k=skk))):
+        scfg = ServeConfig(max_len=smax_len, cache_dtype="float32",
+                           n_slots=sslots, decode_burst=burst, **kw)
+        r = run_engine(model, params, sreqs, scfg)
+        results["spec_engines"][name] = r
+        extra = (f",acceptance={r['acceptance_rate']:.2f},"
+                 f"tok_per_call={r['tokens_per_model_call']:.2f}"
+                 if name == "spec" else
+                 f",tok_per_call={r['tokens_per_model_call']:.2f}")
+        report(f"bench_serve,spec_{name},"
+               f"tokens_per_s={r['tokens_per_s']:.1f},"
+               f"model_calls={r['model_calls']}{extra}")
+    sspeed = (results["spec_engines"]["spec"]["tokens_per_s"] /
+              results["spec_engines"]["baseline"]["tokens_per_s"])
+    results["spec_vs_baseline"] = sspeed
+    report(f"bench_serve,speedup,spec_vs_baseline={sspeed:.2f}")
     return results
 
 
 if __name__ == "__main__":
     import argparse
     import json
+    import os
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_serve.json")
@@ -202,8 +310,22 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-only", action="store_true",
                     help="run only the shared-prefix (paged vs dense) "
                          "section, skipping the Poisson scheduler comparison")
+    ap.add_argument("--spec-only", action="store_true",
+                    help="run only the repetitive-workload (speculative vs "
+                         "continuous) section")
+    ap.add_argument("--merge", action="store_true",
+                    help="update an existing --json file in place (a "
+                         "section-only run keeps the other sections' "
+                         "results, so each section can be measured in its "
+                         "own fresh process)")
     args = ap.parse_args()
-    res = run(print, smoke=args.smoke, prefix_only=args.prefix_only)
+    res = run(print, smoke=args.smoke, prefix_only=args.prefix_only,
+              spec_only=args.spec_only)
+    out: dict = {}
+    if args.merge and os.path.exists(args.json):
+        with open(args.json) as f:
+            out = json.load(f)
+    out.update(res)
     with open(args.json, "w") as f:
-        json.dump(res, f, indent=2)
+        json.dump(out, f, indent=2)
     print(f"# wrote {args.json}")

@@ -1,4 +1,5 @@
-"""Continuous-batching serving tour: slot pool, paged KV pages, prefix cache.
+"""Continuous-batching serving tour: slot pool, paged KV pages, prefix
+cache, and (``--spec``) speculative decoding.
 
 Eight ragged requests drawn from two shared system prompts go through the
 continuous-batching scheduler three ways:
@@ -11,10 +12,16 @@ continuous-batching scheduler three ways:
 
 Greedy outputs are token-for-token identical across all three (and to a
 solo ``generate`` of each prompt) — layout and caching are invisible to
-the arithmetic.  A plain lockstep ``generate`` run closes the tour.
+the arithmetic.  With ``--spec`` the same requests are ALSO served by the
+speculative scheduler (n-gram self-drafting + one-call verify bursts,
+``--draft-k`` tokens per step): still token-for-token identical, but with
+an acceptance-rate summary showing how many tokens each model call earned.
+A plain lockstep ``generate`` run closes the tour.
 
-Run:  PYTHONPATH=src python examples/serve_decode.py
+Run:  PYTHONPATH=src python examples/serve_decode.py [--spec] [--draft-k 4]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,6 +32,14 @@ from repro.models import build_model
 from repro.models.layers import unbox
 from repro.serve.engine import generate
 from repro.serve.scheduler import Request, SlotPoolEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--spec", action="store_true",
+                help="also serve with the speculative scheduler and print "
+                     "the acceptance-rate summary")
+ap.add_argument("--draft-k", type=int, default=4,
+                help="draft tokens verified per slot per spec step")
+args = ap.parse_args()
 
 cfg = smoke_config(get_config("qwen2-1.5b")).with_(softmax_impl="hyft16",
                                                    vocab=128)
@@ -40,26 +55,37 @@ reqs = [Request(rid=i,
                 max_new=int(rng.integers(4, 9)))
         for i in range(8)]
 
+variants = [("dense", dict()),
+            ("paged", dict(kv_layout="paged", page_size=8)),
+            ("paged+prefix", dict(kv_layout="paged", page_size=8,
+                                  prefix_cache=True))]
+if args.spec:
+    variants.append(("spec", dict(scheduler="spec", draft_k=args.draft_k)))
+
 outs = {}
-for name, kw in (("dense", dict()),
-                 ("paged", dict(kv_layout="paged", page_size=8)),
-                 ("paged+prefix", dict(kv_layout="paged", page_size=8,
-                                       prefix_cache=True))):
+for name, kw in variants:
     scfg = ServeConfig(max_len=48, cache_dtype="float32",
-                       scheduler="continuous", n_slots=4, decode_burst=4,
-                       eos_id=None, **kw)
+                       scheduler=kw.pop("scheduler", "continuous"),
+                       n_slots=4, decode_burst=4, eos_id=None, **kw)
     eng = SlotPoolEngine(model, params, scfg)
     done = eng.run(reqs)
     outs[name] = {rid: c.tokens for rid, c in done.items()}
     st = eng.stats
-    paged_info = (f" cached={st['cached_tokens']} hits={st['prefix_hits']}"
-                  f" pages_peak={st['pages_peak']}"
-                  if kw.get("kv_layout") == "paged" else "")
+    extra = (f" cached={st['cached_tokens']} hits={st['prefix_hits']}"
+             f" pages_peak={st['pages_peak']}"
+             if kw.get("kv_layout") == "paged" else "")
+    if name == "spec":
+        acc = st["accepted_tokens"] / max(1, st["draft_tokens"])
+        extra = (f" drafted={st['draft_tokens']}"
+                 f" accepted={st['accepted_tokens']} (rate {acc:.2f})"
+                 f" tokens/model-call="
+                 f"{st['tokens_emitted'] / max(1, st['model_calls']):.2f}")
     print(f"{name:13s} prefill_tokens={st['prefill_tokens']:3d}"
-          f" prefills={st['prefills']}{paged_info}")
+          f" prefills={st['prefills']}{extra}")
 
-assert outs["dense"] == outs["paged"] == outs["paged+prefix"]
-print("all layouts emit identical greedy tokens")
+names = [n for n, _ in variants]
+assert all(outs[n] == outs["dense"] for n in names)
+print(f"all {len(names)} serving modes emit identical greedy tokens")
 for rid in sorted(outs["dense"]):
     print(f"  [{rid}] {outs['dense'][rid]}")
 

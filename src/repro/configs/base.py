@@ -110,6 +110,11 @@ class ServeConfig:
     cache_dtype: str = "bfloat16"
     seq_parallel: bool = False       # sequence-parallel decode attention
     temperature: float = 0.0
+    # sampling filters (temperature > 0 only): top_k = 0 disables, top_p =
+    # 1.0 disables; both applied to the temperature-scaled logits (top-k
+    # first, then the nucleus) in ``repro.serve.engine._sample``
+    top_k: int = 0
+    top_p: float = 1.0
     # attention-mode override (None = use the model config's attn_mode);
     # "kernel" keeps masked decode on the fused (split-K) Pallas kernel
     attn_mode: Optional[str] = None
@@ -124,7 +129,10 @@ class ServeConfig:
     n_slots: int = 8
     # "continuous" = admit queued requests into freed slots mid-decode;
     # "lockstep" = drain the whole pool before admitting the next group
-    # (the PR 2-style rectangular baseline, generalized to ragged prompts)
+    # (the PR 2-style rectangular baseline, generalized to ragged prompts);
+    # "spec" = continuous admission + speculative decode bursts
+    # (repro/serve/spec.py): draft K tokens per slot, verify them in ONE
+    # prefill-shaped model call, keep the longest accepted prefix
     scheduler: str = "lockstep"
     # jitted masked decode steps per burst between host admission checks
     decode_burst: int = 8
@@ -141,6 +149,20 @@ class ServeConfig:
     # reuse its pages (refcounted, copy-on-write by page granularity) and
     # skip prefill for the cached tokens (paged layout only)
     prefix_cache: bool = False
+    # --- speculative decoding (repro/serve/spec.py, DESIGN.md §11) ---
+    # drafter for scheduler="spec": "ngram" = deterministic prompt-lookup
+    # self-drafting (no second model — greedy outputs provably unchanged);
+    # "model" = a small zoo model sharing the slot pool (inject it via
+    # SlotPoolEngine(draft=(model, params)))
+    spec_mode: str = "ngram"
+    # draft tokens verified per slot per spec step (the verify chunk is
+    # draft_k + 1 lanes: [last_token, draft_1..draft_k])
+    draft_k: int = 4
+    # longest trailing n-gram the prompt-lookup drafter matches
+    ngram_max: int = 3
+    # zoo arch name for spec_mode="model" launched from the CLI (random
+    # init unless params are injected — a demo drafter, not a good one)
+    draft_model: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

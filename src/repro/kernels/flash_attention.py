@@ -491,14 +491,17 @@ def _decode_tile(q, k, v, maskrow, cfg: HyftConfig, sm_scale: float):
     """L1 of the decode tree: local Hyft stages 1-2 for one KV split.
 
     q (gp, dh) — GQA group folded into rows; k/v (bk, dh) fp32 (already
-    dequantized); maskrow (bk,).  Returns (acc (gp, dh), m_loc (gp, 1) raw,
-    l_loc (gp, 1)) — the split-local (max, fixed-sum, acc) stats.  Shared
-    verbatim by the contiguous split-K kernel and the paged kernel, so a
-    page IS a split and the bitwise story reduces to the combine order.
+    dequantized); maskrow (bk,) shared across rows, or (gp, bk) per-row
+    (the verify kernel's causal-within-draft mask).  Returns (acc (gp, dh),
+    m_loc (gp, 1) raw, l_loc (gp, 1)) — the split-local (max, fixed-sum,
+    acc) stats.  Shared verbatim by the contiguous split-K kernel, the
+    paged kernel, and the verify kernels, so a page IS a split and the
+    bitwise story reduces to the combine order.
     """
     z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=F32) * sm_scale
-    z = jnp.where(maskrow[None, :] > 0, z, NEG_BIG)
+    mrow = maskrow if maskrow.ndim == 2 else maskrow[None, :]
+    z = jnp.where(mrow > 0, z, NEG_BIG)
     z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
     zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
     m_loc = jnp.max(zsub, axis=-1, keepdims=True)
@@ -748,3 +751,220 @@ def flash_hyft_decode_paged(q: jax.Array, k_pages: jax.Array,
 
     out = _splitk_combine(acc, m_st, l_st, cfg)
     return out[:, :g].reshape(B, Hkv, g, D).reshape(B, Hq, 1, D)
+
+
+# --------------------------------------------------------------------------
+# speculative-decode verify kernel (Sq = K + 1 draft tokens per slot)
+# --------------------------------------------------------------------------
+#
+# Speculative decoding turns K one-token decode steps into ONE prefill-shaped
+# verification: the model scores [last_token, draft_1..draft_K] in a single
+# pass and keeps the longest accepted prefix.  That is exactly the regime the
+# Hyft pipeline amortizes best — the softmax work is batched along the
+# sequence axis, so the per-token share of stage-1/2/3 overhead drops by the
+# draft length (the same observation Vasyltsov & Chang make for batched
+# softmax approximation).
+#
+# The kernel is the split-K decode machine with the draft axis folded into
+# the tile rows alongside the GQA group: q rows enumerate (group member,
+# draft position), every row shares each K/V block load, and each split
+# emits the same local (max, fixed-sum, acc) stats through ``_decode_tile``
+# merged by ``_splitk_combine``.  The ONLY new ingredient is the mask: draft
+# token t sits at cache position pos+t and must see exactly [0, pos+t] —
+# a per-ROW validity mask (causal within the draft, ragged lengths across
+# the batch) instead of the decode kernel's per-slot row.  The caller
+# supplies it as (B, Sq, Lk); it rides in un-duplicated (the mask depends
+# only on the draft lane) and expands over the GQA group inside the tile,
+# so at Sq == 1 the kernel is bitwise identical to ``flash_hyft_decode`` /
+# ``flash_hyft_decode_paged`` on the same splits.
+#
+# Both KV layouts are served by one entry point: contiguous (B, Hkv, Sk, D)
+# stripes split by ``block_k``, or a paged pool + scalar-prefetched block
+# tables with pages as splits.  fp2fx8 dequantization fuses into the K/V
+# loads exactly as in the decode kernels.
+
+
+def _verify_mask_rows(mask, group: int):
+    """(sp, bk) per-draft-lane mask -> (group * sp, bk) tile rows.  The
+    mask depends only on the draft lane, so it rides in UN-duplicated and
+    expands over the GQA group inside the tile (a VMEM broadcast) instead
+    of streaming a group-fold redundant HBM buffer."""
+    sp, bk = mask.shape
+    return jnp.broadcast_to(mask[None], (group, sp, bk)).reshape(
+        group * sp, bk)
+
+
+def _verify_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float,
+                       quantized: bool, group: int):
+    if quantized:
+        q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref = refs
+    q = q_ref[0].astype(F32)              # (rows, dh) — (group, draft) rows
+    k = k_ref[0].astype(F32)              # (bk, dh)
+    v = v_ref[0].astype(F32)
+    if quantized:                         # dequant fused into the load
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
+    mask = _verify_mask_rows(mask_ref[0], group)
+    acc, m_loc, l_loc = _decode_tile(q, k, v, mask, cfg, sm_scale)
+    acc_ref[...] = acc[None, None]
+    m_ref[...] = jnp.broadcast_to(m_loc[None, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_loc[None, None], l_ref.shape)
+
+
+def _verify_paged_kernel(*refs, cfg: HyftConfig, sm_scale: float,
+                         quantized: bool, group: int):
+    if quantized:
+        (bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        bt_ref, q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref = refs
+    del bt_ref  # consumed by the index maps (scalar prefetch)
+    q = q_ref[0].astype(F32)              # (rows, dh)
+    k = k_ref[0, 0].astype(F32)           # (ps, dh) — one physical page
+    v = v_ref[0, 0].astype(F32)
+    if quantized:                         # dequant fused into the page load
+        k = k * ks_ref[0, 0][:, None]
+        v = v * vs_ref[0, 0][:, None]
+    mask = _verify_mask_rows(mask_ref[0], group)
+    acc, m_loc, l_loc = _decode_tile(q, k, v, mask, cfg, sm_scale)
+    acc_ref[...] = acc[None, None]
+    m_ref[...] = jnp.broadcast_to(m_loc[None, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_loc[None, None], l_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "sm_scale", "block_k", "interpret"))
+def flash_hyft_verify(q: jax.Array, k: jax.Array, v: jax.Array,
+                      kv_pos_mask: jax.Array, cfg: HyftConfig,
+                      sm_scale: float | None = None, block_k: int = 256,
+                      interpret: bool = True,
+                      block_tables: jax.Array | None = None,
+                      k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None):
+    """Split-K fused verify attention with Hyft softmax (Sq = draft chunk).
+
+    Args:
+      q: (B, Hq, Sq, D) — the [last_token, draft_1..draft_K] queries.
+      k, v: contiguous (B, Hkv, Sk, D) stripes, or — with ``block_tables``
+        (B, nb) — a paged pool (n_pages, Hkv, page_size, D).  Either layout
+        may be int8 FP2FX raws with ``k_scale``/``v_scale`` fp32 scales
+        (dequantization fuses into the loads).
+      kv_pos_mask: (B, Sq, Lk) per-draft-token validity over the (virtual)
+        KV axis, nonzero = visible — the causal-within-draft mask
+        ``kv_index <= pos + t`` plus any cache-length masking.  Ragged
+        draft lengths across the batch ride in here (a padded draft row's
+        outputs are discarded by the caller).
+    Returns (B, Hq, Sq, D) fp32.  Forward-only.  At Sq == 1 this is bitwise
+    identical to ``flash_hyft_decode`` (same splits) / ``_decode_paged``
+    (pages as splits): the tile arithmetic is the shared ``_decode_tile``
+    and the combine the shared ``_splitk_combine``; only the mask gained a
+    row axis.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    sp = -(-Sq // 8) * 8                  # sublane-aligned draft rows
+    rows = g * sp                         # tile rows: (group, draft) folded
+    maskf = kv_pos_mask.astype(F32)       # (B, Sq, Lk)
+
+    q3 = q.reshape(B, Hkv, g, Sq, D)
+    q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, 0), (0, sp - Sq), (0, 0)))
+    q3 = q3.reshape(B * Hkv, rows, D)
+
+    quantized = k_scale is not None
+
+    if block_tables is not None:  # ---- paged layout: pages as splits ----
+        from jax.experimental.pallas import tpu as pltpu
+
+        ps = k.shape[2]
+        nb = block_tables.shape[1]
+        maskE = jnp.pad(maskf, ((0, 0), (0, sp - Sq), (0, 0)))  # (B, sp, Lv)
+        in_specs = [
+            pl.BlockSpec((1, rows, D), lambda b, j, bt: (b, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, j, bt, h=Hkv: (bt[b // h, j], b % h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, j, bt, h=Hkv: (bt[b // h, j], b % h, 0, 0)),
+        ]
+        operands = [q3, k, v]
+        if quantized:
+            in_specs += [pl.BlockSpec(
+                (1, 1, ps),
+                lambda b, j, bt, h=Hkv: (bt[b // h, j], b % h, 0))] * 2
+            operands += [k_scale, v_scale]
+        in_specs.append(
+            pl.BlockSpec((1, sp, ps), lambda b, j, bt, h=Hkv: (b // h, 0, j)))
+        operands.append(maskE)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * Hkv, nb),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, 1, rows, D), lambda b, j, bt: (b, j, 0, 0)),
+                pl.BlockSpec((1, 1, rows, 128), lambda b, j, bt: (b, j, 0, 0)),
+                pl.BlockSpec((1, 1, rows, 128), lambda b, j, bt: (b, j, 0, 0)),
+            ],
+        )
+        acc, m_st, l_st = pl.pallas_call(
+            functools.partial(_verify_paged_kernel, cfg=cfg, sm_scale=scale,
+                              quantized=quantized, group=g),
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((B * Hkv, nb, rows, D), F32),
+                jax.ShapeDtypeStruct((B * Hkv, nb, rows, 128), I32),
+                jax.ShapeDtypeStruct((B * Hkv, nb, rows, 128), F32),
+            ],
+            interpret=interpret,
+        )(block_tables.astype(I32), *operands)
+    else:  # ---- contiguous layout: block_k splits, as flash_hyft_decode ----
+        Sk = k.shape[2]
+        bk = min(block_k, -(-Sk // 128) * 128)  # lane-aligned KV blocks
+        pad_k = (-Sk) % bk
+        if pad_k:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            maskf = jnp.pad(maskf, ((0, 0), (0, 0), (0, pad_k)))
+            if quantized:
+                k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad_k)))
+                v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad_k)))
+        Skp = Sk + pad_k
+        ns = Skp // bk
+        maskE = jnp.pad(maskf, ((0, 0), (0, sp - Sq), (0, 0)))  # (B, sp, Skp)
+        in_specs = [
+            pl.BlockSpec((1, rows, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),
+        ]
+        operands = [q3, k.reshape(B * Hkv, Skp, D), v.reshape(B * Hkv, Skp, D)]
+        if quantized:
+            in_specs += [pl.BlockSpec((1, bk), lambda b, j: (b, j))] * 2
+            operands += [k_scale.reshape(B * Hkv, Skp),
+                         v_scale.reshape(B * Hkv, Skp)]
+        in_specs.append(
+            pl.BlockSpec((1, sp, bk), lambda b, j, h=Hkv: (b // h, 0, j)))
+        operands.append(maskE)
+        acc, m_st, l_st = pl.pallas_call(
+            functools.partial(_verify_fwd_kernel, cfg=cfg, sm_scale=scale,
+                              quantized=quantized, group=g),
+            grid=(B * Hkv, ns),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, 1, rows, D), lambda b, j: (b, j, 0, 0)),
+                pl.BlockSpec((1, 1, rows, 128), lambda b, j: (b, j, 0, 0)),
+                pl.BlockSpec((1, 1, rows, 128), lambda b, j: (b, j, 0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((B * Hkv, ns, rows, D), F32),
+                jax.ShapeDtypeStruct((B * Hkv, ns, rows, 128), I32),
+                jax.ShapeDtypeStruct((B * Hkv, ns, rows, 128), F32),
+            ],
+            interpret=interpret,
+        )(*operands)
+
+    out = _splitk_combine(acc, m_st, l_st, cfg)        # (BH, rows, D)
+    out = out.reshape(B, Hkv, g, sp, D)[:, :, :, :Sq]
+    return out.reshape(B, Hq, Sq, D)

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from repro.core.hyft import HyftConfig
 from repro.kernels import hyft_softmax as _hk
 from repro.kernels.flash_attention import (  # noqa: F401
-    flash_hyft_attention, flash_hyft_decode, flash_hyft_decode_paged)
+    flash_hyft_attention, flash_hyft_decode, flash_hyft_decode_paged,
+    flash_hyft_verify)
 
 F32 = jnp.float32
 
@@ -117,3 +118,23 @@ def hyft_paged_decode_attention(q, k_pages, v_pages, block_tables,
                                    interpret=_auto_interpret(),
                                    kv_len_mask=as_mask_f(kv_len_mask),
                                    k_scale=k_scale, v_scale=v_scale)
+
+
+def hyft_verify_attention(q, k, v, kv_pos_mask, cfg: HyftConfig,
+                          sm_scale=None, block_k=256, block_tables=None,
+                          k_scale=None, v_scale=None):
+    """Split-K fused verify attention (Sq = draft chunk) with Hyft softmax.
+
+    The speculative-decoding fast path: scores the [last_token, drafts]
+    chunk of every slot in one kernel call, with a per-draft-token
+    ``kv_pos_mask`` (B, Sq, Lk) carrying the causal-within-draft frontier
+    and ragged draft lengths.  ``block_tables`` switches K/V to the paged
+    pool layout (pages as splits); int8 K/V with ``k_scale``/``v_scale``
+    fuse fp2fx8 dequantization into the loads.  At Sq == 1 this is bitwise
+    identical to the decode kernels on the same splits.
+    """
+    return flash_hyft_verify(q, k, v, as_mask_f(kv_pos_mask), cfg,
+                             sm_scale=sm_scale, block_k=block_k,
+                             interpret=_auto_interpret(),
+                             block_tables=block_tables,
+                             k_scale=k_scale, v_scale=v_scale)

@@ -7,6 +7,10 @@
   # continuous batching: ragged prompts, slot-pool KV cache, EOS early-exit
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --scheduler continuous --n-slots 4 --batch 8 --max-new 24 --eos-id 7
+
+  # speculative decoding: n-gram self-drafting + one-call verify bursts
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --scheduler spec --draft-k 4 --n-slots 4 --batch 8 --max-new 24
 """
 import argparse
 
@@ -27,10 +31,24 @@ def main():
                     help="'scan' = one on-device lax.scan; 'host' = "
                          "per-token jitted steps (debug)")
     ap.add_argument("--scheduler", default="lockstep",
-                    choices=["lockstep", "continuous"],
+                    choices=["lockstep", "continuous", "spec"],
                     help="'continuous' = slot-pool continuous batching with "
                          "ragged prompts and EOS early-exit; 'lockstep' = "
-                         "one rectangular batch (PR 2 fast path)")
+                         "one rectangular batch (PR 2 fast path); 'spec' = "
+                         "continuous admission + speculative decode bursts "
+                         "(draft K tokens, verify in one model call)")
+    ap.add_argument("--spec-mode", default="ngram",
+                    choices=["ngram", "model"],
+                    help="drafter for --scheduler spec: 'ngram' = "
+                         "deterministic prompt-lookup self-drafting; "
+                         "'model' = a small zoo model (--draft-model)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens verified per slot per spec step")
+    ap.add_argument("--ngram-max", type=int, default=3,
+                    help="longest trailing n-gram the lookup drafter matches")
+    ap.add_argument("--draft-model", default=None,
+                    help="zoo arch for --spec-mode model (random init: a "
+                         "demo drafter — acceptance floor is chance)")
     ap.add_argument("--n-slots", type=int, default=4,
                     help="slot-pool size for --scheduler continuous")
     ap.add_argument("--eos-id", type=int, default=None,
@@ -62,6 +80,12 @@ def main():
                     help="decode horizon (continuous: the maximum; horizons "
                          "are ragged in [max_new//2, max_new])")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sampling: keep only the k highest logits "
+                         "(0 = off; temperature > 0 only)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest token set "
+                         "with probability mass >= p (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -73,7 +97,7 @@ def main():
     from repro.models import build_model
     from repro.models.layers import unbox
     from repro.serve.engine import generate
-    from repro.serve.scheduler import Request, serve
+    from repro.serve.scheduler import Request, SlotPoolEngine
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -88,6 +112,8 @@ def main():
                        max_len=args.prefill + args.max_new + 1,
                        cache_dtype=args.cache_dtype,
                        temperature=args.temperature,
+                       top_k=args.top_k,
+                       top_p=args.top_p,
                        attn_mode=args.attn_mode,
                        decode_loop=args.decode_loop,
                        scheduler=args.scheduler,
@@ -97,14 +123,18 @@ def main():
                        kv_layout=args.kv_layout,
                        page_size=args.page_size,
                        n_pages=args.n_pages,
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache,
+                       spec_mode=args.spec_mode,
+                       draft_k=args.draft_k,
+                       ngram_max=args.ngram_max,
+                       draft_model=args.draft_model)
 
-    # the paged layout and prefix cache live in the slot-pool scheduler, so
-    # those flags route through it even under --scheduler lockstep (the
-    # rectangular generate path below is dense-only and would silently
-    # ignore them)
-    if (args.scheduler == "continuous" or args.kv_layout != "dense"
-            or args.prefix_cache):
+    # the paged layout, prefix cache, and spec decoding live in the
+    # slot-pool scheduler, so those flags route through it even under
+    # --scheduler lockstep (the rectangular generate path below is
+    # dense-only, non-speculative, and would silently ignore them)
+    if (args.scheduler in ("continuous", "spec")
+            or args.kv_layout != "dense" or args.prefix_cache):
         rng = np.random.default_rng(args.seed)
         reqs = []
         for rid in range(args.batch):
@@ -121,11 +151,20 @@ def main():
                 max_new=int(rng.integers(max(1, args.max_new // 2),
                                          args.max_new + 1)),
                 frames=frames))
-        done = serve(model, params, reqs, scfg, key=sample_key)
+        eng = SlotPoolEngine(model, params, scfg, key=sample_key)
+        done = eng.run(reqs)
         for rid in sorted(done):
             c = done[rid]
             print(f"[{rid}] prompt={c.prompt_len} new={len(c.tokens)} "
                   f"{c.tokens}")
+        if args.scheduler == "spec":
+            st = eng.stats
+            acc = st["accepted_tokens"] / max(1, st["draft_tokens"])
+            print(f"spec: steps={st['spec_steps']} "
+                  f"drafted={st['draft_tokens']} "
+                  f"accepted={st['accepted_tokens']} (rate {acc:.2f}) "
+                  f"tokens/model-call="
+                  f"{st['tokens_emitted'] / max(1, st['model_calls']):.2f}")
         return
 
     batch = {"tokens": jax.random.randint(

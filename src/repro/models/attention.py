@@ -130,10 +130,24 @@ _hyft_finalize = hyft_finalize
 
 
 def _mask_chunks(kv_len_mask, B, nk, chunk):
-    """(B, Sk) float mask -> (nk, B, chunk) scan slices, or None."""
+    """(B, Sk) float mask -> (nk, B, chunk) scan slices; a 3D (B, Sq, Sk)
+    per-query-row mask (the verify path) -> (nk, B, Sq, chunk).  None passes
+    through."""
     if kv_len_mask is None:
         return None
+    if kv_len_mask.ndim == 3:
+        Sq = kv_len_mask.shape[1]
+        return kv_len_mask.reshape(B, Sq, nk, chunk).transpose(2, 0, 1, 3)
     return kv_len_mask.reshape(B, nk, chunk).transpose(1, 0, 2)
+
+
+def _mask_bcast(mt):
+    """One scan slice of ``_mask_chunks`` broadcast against z
+    (B, Hkv, g, Sq, chunk): (B, chunk) masks every query row, (B, Sq, chunk)
+    masks per query row."""
+    if mt.ndim == 3:
+        return mt[:, None, None, :, :]
+    return mt[:, None, None, None, :]
 
 
 def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset,
@@ -157,7 +171,7 @@ def _chunked_fwd(q, k, v, cfg: HyftConfig, causal: bool, chunk: int, q_offset,
             ki = jax.lax.broadcasted_iota(I32, (Sq, chunk), 1) + j * chunk
             z = jnp.where((qi >= ki)[None, None, None], z, NEG_BIG)
         if mt is not None:  # pre-FP2FX, same as the unfused path
-            z = jnp.where(mt[:, None, None, None, :] > 0, z, NEG_BIG)
+            z = jnp.where(_mask_bcast(mt) > 0, z, NEG_BIG)
         m_new, alpha, l_blk, p = _hyft_chunk_stats(z, cfg, m_run)
         l_run = nm.fx_quantize(l_run * alpha, cfg.acc_bits) + l_blk
         acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vt)
@@ -219,7 +233,7 @@ def _cha_bwd(cfg, causal, chunk, q_offset, res, do):
             ki = jax.lax.broadcasted_iota(I32, (Sq, chunk), 1) + j * chunk
             z = jnp.where((qi >= ki)[None, None, None], z, NEG_BIG)
         if mt is not None:
-            z = jnp.where(mt[:, None, None, None, :] > 0, z, NEG_BIG)
+            z = jnp.where(_mask_bcast(mt) > 0, z, NEG_BIG)
         z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
         e, m = nm.exp_unit(z_raw - m_f, cfg.frac_bits, cfg.mant_bits)
         return nm.log_div(e, m, e_b, m_b, cfg.mant_bits)  # broadcast over chunk
@@ -433,6 +447,33 @@ def cache_update_ragged(cache, k_new, v_new, pos_b, write_mask=None):
             "v": up(cache["v"], v_new, pos_b, gate)}
 
 
+def cache_update_block_ragged(cache, k_new, v_new, pos_b, n_valid,
+                              write_mask=None):
+    """Multi-token ragged scatter: token ``j`` of row ``b`` lands at
+    ``pos_b[b] + j`` — the speculative-decode verify write, where the
+    [last_token, draft...] chunk enters the cache BEFORE attention exactly
+    like the one-token decode step's write-then-attend.
+
+    ``n_valid`` (B,) bounds each row's real tokens (draft lengths are
+    ragged across the batch); lanes with ``j >= n_valid[b]`` — and whole
+    rows with ``write_mask[b]`` False — rewrite their *old* content at a
+    clamped position, so padded drafts neither corrupt the cache nor shift
+    a ``dynamic_update_slice`` at the cache edge.  Token-by-token through
+    ``cache_update_ragged`` so the fp2fx8 per-(head, position) scales are
+    bitwise those of sequential decode writes.
+    """
+    B, _, S, _ = k_new.shape
+    L = cache["k"].shape[2]
+    base = jnp.ones((B,), bool) if write_mask is None else write_mask
+    nv = jnp.asarray(n_valid, I32)
+    for j in range(S):
+        gate = base & (j < nv) & (pos_b + j < L)
+        pj = jnp.clip(pos_b + j, 0, L - 1)
+        cache = cache_update_ragged(cache, k_new[:, :, j:j + 1],
+                                    v_new[:, :, j:j + 1], pj, gate)
+    return cache
+
+
 # --------------------------------------------------------------------------
 # paged KV cache (block-table indirection over a global page pool)
 # --------------------------------------------------------------------------
@@ -487,6 +528,27 @@ def cache_update_paged(cache, k_new, v_new, pos_b, block_tables,
                 "v_scale": scat(cache["v_scale"], vs[:, :, 0])}
     return {"k": scat(cache["k"], k_new[:, :, 0]),
             "v": scat(cache["v"], v_new[:, :, 0])}
+
+
+def cache_update_block_paged(cache, k_new, v_new, pos_b, block_tables,
+                             n_valid, write_mask=None):
+    """Paged twin of ``cache_update_block_ragged``: token ``j`` of row ``b``
+    scatters through the block table at virtual position ``pos_b[b] + j``.
+    Lanes past ``n_valid[b]``, rows with ``write_mask`` False, and lanes
+    past the table's virtual extent are redirected to the null page — the
+    usual paged "no write" that can never race a live page.
+    """
+    B, _, S, _ = k_new.shape
+    Lv = block_tables.shape[1] * cache["k"].shape[2]
+    base = jnp.ones((B,), bool) if write_mask is None else write_mask
+    nv = jnp.asarray(n_valid, I32)
+    for j in range(S):
+        gate = base & (j < nv) & (pos_b + j < Lv)
+        pj = jnp.clip(pos_b + j, 0, Lv - 1)
+        cache = cache_update_paged(cache, k_new[:, :, j:j + 1],
+                                   v_new[:, :, j:j + 1], pj, block_tables,
+                                   gate)
+    return cache
 
 
 def paged_gather_kv(cache, block_tables):
@@ -546,3 +608,62 @@ def decode_attention(q, cache, cfg, *, kv_len_mask=None):
             v_scale=cache.get("v_scale")).astype(q.dtype)
     k, v = cache_kv(cache)
     return attention_fwd(q, k, v, cfg, causal=False, kv_len_mask=kv_len_mask)
+
+
+# --------------------------------------------------------------------------
+# speculative-decode verify (Sq = draft chunk, per-token causal frontier)
+# --------------------------------------------------------------------------
+
+
+def _verify_unfused(q, k, v, softmax_impl: str, kv_pos_mask):
+    """Unfused reference with a per-query-token (B, Sq, Sk) mask — the same
+    arithmetic as ``unfused_attention``'s masked decode, one row per draft
+    token, so greedy verify matches greedy sequential decode per row."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    z = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(F32),
+                   k.astype(F32)) * (D ** -0.5)
+    z = jnp.where(kv_pos_mask[:, None, None, :, :] > 0, z, NEG_BIG)
+    p = get_softmax(softmax_impl)(z).astype(F32)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(F32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def verify_attention(q, cache, cfg, *, kv_pos_mask, block_tables=None):
+    """Attention for the speculative-decode verify step: ``q`` carries the
+    [last_token, draft...] chunk (Sq = K + 1) and ``kv_pos_mask`` (B, Sq,
+    Lk) each token's causal frontier (``kv_index <= pos + t``), so every
+    draft token sees exactly the KV a sequential decode step would have —
+    the prefill-style masked Hyft path applied to the serving cache.
+
+    With a Hyft softmax and ``attn_mode="kernel"`` this is the split-K
+    verify kernel (dense stripes or — with ``block_tables`` — the paged
+    pool, fp2fx8 dequant fused into the loads); chunked mode runs the
+    online-Hyft scan under the same per-row mask; everything else falls to
+    the unfused reference.  Each mode mirrors its decode counterpart's
+    arithmetic, which is what makes greedy speculative decode
+    token-for-token identical to vanilla greedy decode.
+    """
+    hcfg = hyft_config_for(cfg.softmax_impl)
+    mode = getattr(cfg, "attn_mode", "unfused")
+    if hcfg is not None and mode == "kernel":
+        from repro.kernels import ops
+        return ops.hyft_verify_attention(
+            q, cache["k"], cache["v"], kv_pos_mask, hcfg,
+            block_tables=block_tables,
+            k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale")).astype(q.dtype)
+    if block_tables is not None:
+        k, v = paged_gather_kv(cache, block_tables)
+    else:
+        k, v = cache_kv(cache)
+    if hcfg is not None and mode == "chunked":
+        chunk = min(getattr(cfg, "attn_chunk", 512), k.shape[2])
+        if k.shape[2] % chunk == 0:
+            from repro.kernels import ops
+            return chunked_hyft_attention(
+                q, k, v, hcfg, False, chunk, 0,
+                ops.as_mask_f(kv_pos_mask)).astype(q.dtype)
+    return _verify_unfused(q, k, v, cfg.softmax_impl, kv_pos_mask)

@@ -29,6 +29,9 @@ class Model:
     init_cache: Callable
     # paged serving cache (attention families only; None = layout unsupported)
     init_paged_cache: Any = None
+    # speculative-decode verify: score a (B, S) draft chunk in one forward
+    # (attention families only; None = spec decoding unsupported)
+    verify_step: Any = None
 
 
 def resolve_attn_mode(model: Model, attn_mode) -> Model:
@@ -66,6 +69,10 @@ def build_model(cfg: ModelConfig) -> Model:
         init_paged_cache=(
             (lambda p, n_pages, page_size, dtype: transformer.init_paged_cache(
                 p, cfg, n_pages, page_size, dtype))
+            if cfg.family in ("dense", "moe", "vlm") else None),
+        verify_step=(
+            (lambda p, c, t, pos, **kw: transformer.verify_step(
+                p, c, t, pos, cfg, **kw))
             if cfg.family in ("dense", "moe", "vlm") else None),
     )
 

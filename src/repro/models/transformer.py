@@ -390,6 +390,73 @@ def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
     return logits_fn(params, x, cfg), cache
 
 
+def verify_step(params, cache, tokens, pos, cfg, n_valid=None,
+                write_mask=None):
+    """Speculative-decode verify: score a (B, S) [last_token, draft...]
+    chunk in ONE forward pass — the prefill-shaped model call that spec
+    decode trades K one-token steps for.
+
+    Row ``b``'s tokens write into the cache at ``pos[b] .. pos[b] + S - 1``
+    (write-then-attend, like ``decode_step``) and each token attends under
+    its own causal frontier ``kv_index <= pos[b] + j``, so the logits at
+    lane ``j`` are exactly what a sequential decode would produce after
+    feeding the first ``j`` drafts.  ``n_valid`` (B,) bounds each row's
+    real tokens (ragged drafts; padded lanes never write and their logits
+    are garbage the caller discards); ``write_mask`` (B,) gates whole rows
+    (inactive slots compute but never mutate).  Rollback needs no KV undo:
+    rejected lanes sit past the row's advanced length, invisible to the
+    ``kv_index <= position`` mask until overwritten.
+
+    Returns (logits (B, S, V), cache).  Attention families only — SSM /
+    hybrid state is a sequential recurrence with no O(1) rewind, so those
+    families serve non-speculatively.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"verify_step needs an attention-family model, got "
+            f"family={cfg.family!r} (SSM/hybrid serve non-speculatively)")
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
+    pos_b = (jnp.asarray(pos, jnp.int32).reshape(B) if jnp.ndim(pos) >= 1
+             else jnp.full((B,), pos, jnp.int32))
+    positions = pos_b[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    nv = (jnp.full((B,), S, jnp.int32) if n_valid is None
+          else jnp.asarray(n_valid, jnp.int32))
+    bt = cache.get("block_tables")
+    if bt is not None:  # paged: virtual KV length = blocks * page size
+        max_len = bt.shape[1] * cache["blocks"]["k"].shape[3]
+    else:
+        max_len = cache["blocks"]["k"].shape[3]
+    kv_mask = jnp.arange(max_len)[None, None, :] <= positions[:, :, None]
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, cfg.pdtype)
+
+    def body(carry, xs_):
+        lp, lc = xs_
+        h = norm_fn(lp["norms"]["pre_attn"], carry)
+        q, k, v = attn.qkv_proj(lp["attn"], h, h, cfg, positions, positions)
+        if bt is not None:
+            nc = attn.cache_update_block_paged(lc, k, v, pos_b, bt, nv,
+                                               write_mask)
+        else:
+            nc = attn.cache_update_block_ragged(lc, k, v, pos_b, nv,
+                                                write_mask)
+        o = attn.verify_attention(q, nc, cfg, kv_pos_mask=kv_mask,
+                                  block_tables=bt)
+        y = carry + attn.out_proj(lp["attn"], o.astype(carry.dtype))
+        h2 = norm_fn(lp["norms"]["pre_mlp"], y)
+        if "moe" in lp:
+            z, _ = moe_mod.moe_apply(lp["moe"], h2, cfg)
+        else:
+            z = mlp_mod.mlp_apply(lp["mlp"], h2, cfg)
+        return y + z.astype(y.dtype), nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    cache = ({"blocks": new_cache} if bt is None
+             else {"blocks": new_cache, "block_tables": bt})
+    x = norm_fn(params["final_norm"], x)
+    return logits_fn(params, x, cfg), cache
+
+
 def prefill(params, cache, tokens, cfg, lengths=None):
     """Fill the cache with a prompt; returns (last logits, cache, length).
 

@@ -2,3 +2,5 @@ from repro.serve.engine import (  # noqa: F401
     build_decode_loop, build_serve_step, generate)
 from repro.serve.scheduler import (  # noqa: F401
     Completion, Request, SlotPoolEngine, serve)
+from repro.serve.spec import (  # noqa: F401
+    ModelDrafter, NgramDrafter, build_spec_step)

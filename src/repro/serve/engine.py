@@ -57,11 +57,43 @@ def build_prefill(model):
     return _PREFILL_CACHE[ck]
 
 
-def _sample(logits, key, temperature):
-    """logits (B, V) -> token ids (B,).  Greedy when temperature == 0."""
-    if temperature > 0:
-        return jax.random.categorical(key, logits / temperature, -1)
-    return jnp.argmax(logits, -1)
+def _sample(logits, key, temperature, top_k: int = 0, top_p: float = 1.0):
+    """logits (B, V) -> token ids (B,).  Greedy when temperature == 0.
+
+    ``top_k`` (0 = off) keeps only the k highest logits; ``top_p`` (1.0 =
+    off) keeps the smallest set of tokens whose probability mass reaches p
+    (the top token always survives).  Both filter the temperature-scaled
+    logits, top-k first then the nucleus — the usual serving-stack order.
+    """
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0 (0 = off), got {top_k}")
+    if not 0.0 < top_p <= 1.0:
+        # top_p <= 0 would empty the nucleus and silently emit token 0
+        raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+    if temperature <= 0:
+        return jnp.argmax(logits, -1)
+    logits = logits / temperature
+    V = logits.shape[-1]
+    use_k = bool(top_k) and 0 < top_k < V
+    if use_k or top_p < 1.0:
+        # one descending sort serves both filters — this runs inside the
+        # jitted per-token decode loops
+        srt = jnp.sort(logits, axis=-1)[..., ::-1]
+        if use_k:
+            logits = jnp.where(logits < srt[..., top_k - 1][..., None],
+                               -jnp.inf, logits)
+            # the nucleus is computed over the top-k-filtered distribution
+            srt = jnp.where(jnp.arange(V) < top_k, srt, -jnp.inf)
+        if top_p < 1.0:
+            prob = jax.nn.softmax(srt, axis=-1)
+            # keep while the mass BEFORE a token is < p: the minimal
+            # nucleus, and the top token is always kept (its exclusive
+            # prefix mass is 0)
+            keep = (jnp.cumsum(prob, axis=-1) - prob) < top_p
+            thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                             keepdims=True)
+            logits = jnp.where(logits < thresh, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, -1)
 
 
 def build_serve_step(model, scfg: ServeConfig):
@@ -75,7 +107,8 @@ def build_serve_step(model, scfg: ServeConfig):
         @jax.jit
         def step(params, cache, tokens1, pos, key):
             logits, cache = model.decode_step(params, cache, tokens1, pos)
-            nxt = _sample(logits[:, -1, :], key, scfg.temperature)
+            nxt = _sample(logits[:, -1, :], key, scfg.temperature,
+                          scfg.top_k, scfg.top_p)
             return nxt.astype(I32)[:, None], cache
         _cache_put(_STEP_CACHE, ck, step)
     return _STEP_CACHE[ck]
@@ -101,7 +134,8 @@ def build_decode_loop(model, scfg: ServeConfig, steps: int):
                     sub = key_c
                 logits, cache_c = model.decode_step(params, cache_c, tok,
                                                     pos0 + i)
-                nxt = _sample(logits[:, -1, :], sub, scfg.temperature)
+                nxt = _sample(logits[:, -1, :], sub, scfg.temperature,
+                              scfg.top_k, scfg.top_p)
                 tok = nxt.astype(I32)[:, None]
                 return (cache_c, tok, key_c), tok[:, 0]
             (cache, _, _), toks = jax.lax.scan(body, (cache, tok0, key),
@@ -174,7 +208,8 @@ def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
         key, sub = jax.random.split(key)
     else:
         sub = key
-    tok = _sample(last, sub, scfg.temperature).astype(I32)[:, None]
+    tok = _sample(last, sub, scfg.temperature, scfg.top_k,
+                  scfg.top_p).astype(I32)[:, None]
 
     if scfg.decode_loop == "host":
         out = [tok]

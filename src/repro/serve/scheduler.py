@@ -36,6 +36,13 @@ serves that shape of load with three pieces:
                ignore EOS: the PR 2 rectangular baseline generalized to
                ragged prompts, using the *same* burst arithmetic, so a
                benchmark comparison isolates the scheduling policy.
+  spec       — continuous admission + speculative decode bursts
+               (``repro.serve.spec``, DESIGN.md §11): each burst drafts up
+               to ``draft_k`` tokens per slot (ragged across the batch),
+               verifies them in ONE prefill-shaped model call, keeps the
+               longest accepted prefix (EOS/budget on accepted tokens
+               only), and rolls the KV back — greedy outputs are
+               token-for-token identical to continuous/vanilla decode.
 
 ``ServeConfig.kv_layout`` picks the cache layout (DESIGN.md §10):
 
@@ -124,8 +131,8 @@ _AXES_CACHE: dict = {}
 def _burst_key_cfg(scfg: ServeConfig) -> ServeConfig:
     """Burst compilations depend on the decode arithmetic, not the admission
     policy: lockstep mode ignores EOS, so normalize both fields and let the
-    two schedulers share one compiled burst."""
-    eos = scfg.eos_id if scfg.scheduler == "continuous" else None
+    schedulers share one compiled burst (spec honors EOS like continuous)."""
+    eos = scfg.eos_id if scfg.scheduler in ("continuous", "spec") else None
     return dataclasses.replace(scfg, scheduler="", eos_id=eos)
 
 
@@ -155,8 +162,8 @@ def build_burst(model, scfg: ServeConfig, steps: int):
                 sub = key_c
             logits, cache_c = model.decode_step(params, cache_c, tok_c, len_c,
                                                 write_mask=act_c)
-            nxt = engine._sample(logits[:, -1, :], sub,
-                                 scfg.temperature).astype(I32)
+            nxt = engine._sample(logits[:, -1, :], sub, scfg.temperature,
+                                 scfg.top_k, scfg.top_p).astype(I32)
             emit = jnp.where(act_c, nxt, PAD)
             bud_c = bud_c - act_c.astype(I32)
             len_c = len_c + act_c.astype(I32)
@@ -268,15 +275,36 @@ class SlotPoolEngine:
     donated through every burst/scatter call.
     """
 
-    def __init__(self, model, params, scfg: ServeConfig, key=None):
+    def __init__(self, model, params, scfg: ServeConfig, key=None,
+                 draft=None):
         from repro.models import resolve_attn_mode
         self.model = resolve_attn_mode(model, scfg.attn_mode)
         self.params = params
         self.scfg = scfg
         self.key = key if key is not None else jax.random.PRNGKey(0)
         n = scfg.n_slots
+        if scfg.scheduler not in ("continuous", "lockstep", "spec"):
+            raise ValueError(f"unknown scheduler {scfg.scheduler!r}")
         if scfg.kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {scfg.kv_layout!r}")
+        self.spec = scfg.scheduler == "spec"
+        self.drafter = None
+        if self.spec:
+            if scfg.temperature > 0:
+                raise ValueError(
+                    "scheduler='spec' is greedy-only (temperature == 0): "
+                    "sampled speculative acceptance needs distribution-"
+                    "level rejection sampling, not the top-k/top-p filters")
+            if self.model.verify_step is None:
+                raise ValueError(
+                    "scheduler='spec' needs an attention-family model "
+                    "(dense/moe/vlm): SSM/hybrid/encdec state has no O(1) "
+                    "rollback, so those families serve non-speculatively")
+            if scfg.draft_k < 1:
+                raise ValueError("draft_k must be >= 1")
+            from repro.serve import spec as spec_mod
+            self.drafter = spec_mod.make_drafter(scfg, self.model.cfg,
+                                                 draft=draft)
         self.paged = scfg.kv_layout == "paged"
         self.trie = None
         if self.paged:
@@ -320,15 +348,23 @@ class SlotPoolEngine:
                                            scfg.cache_dtype)
             self._scatter = build_scatter(self.model, self._axes,
                                           scfg.max_len, scfg.cache_dtype)
-        self._burst = build_burst(self.model, scfg,
-                                  max(1, scfg.decode_burst))
-        self._eos = scfg.eos_id if scfg.scheduler == "continuous" else None
+        if self.spec:
+            from repro.serve import spec as spec_mod
+            self._spec_step = spec_mod.build_spec_step(
+                self.model, _burst_key_cfg(scfg), scfg.draft_k)
+        else:
+            self._burst = build_burst(self.model, scfg,
+                                      max(1, scfg.decode_burst))
+        self._eos = (scfg.eos_id
+                     if scfg.scheduler in ("continuous", "spec") else None)
         self.stats = {"admitted": 0, "bursts": 0, "prefills": 0,
                       "burst_steps": 0, "slot_steps_active": 0,
                       "peak_active": 0, "tokens_emitted": 0,
                       "prompt_tokens": 0, "prefill_tokens": 0,
                       "cached_tokens": 0, "prefix_hits": 0,
-                      "preemptions": 0, "pages_peak": 0}
+                      "preemptions": 0, "pages_peak": 0,
+                      "model_calls": 0, "spec_steps": 0,
+                      "draft_tokens": 0, "accepted_tokens": 0}
 
     # -- warmup --------------------------------------------------------
 
@@ -388,10 +424,20 @@ class SlotPoolEngine:
                                           scfg.cache_dtype)
             self.cache = self._scatter(self.cache, fresh,
                                        jnp.arange(n, dtype=I32))
-        out = self._burst(self.params, self.cache, jnp.zeros((n, 1), I32),
-                          jnp.zeros(n, I32), jnp.zeros(n, bool),
-                          jnp.zeros(n, I32), jax.random.PRNGKey(0))
-        self.cache = out[1]
+        if self.spec:
+            K = self.scfg.draft_k
+            out = self._spec_step(self.params, self.cache,
+                                  jnp.zeros((n, 1), I32),
+                                  jnp.zeros((n, K), I32), jnp.zeros(n, I32),
+                                  jnp.zeros(n, I32), jnp.zeros(n, bool),
+                                  jnp.zeros(n, I32))
+            self.cache = out[1]
+        else:
+            out = self._burst(self.params, self.cache,
+                              jnp.zeros((n, 1), I32),
+                              jnp.zeros(n, I32), jnp.zeros(n, bool),
+                              jnp.zeros(n, I32), jax.random.PRNGKey(0))
+            self.cache = out[1]
         jax.block_until_ready(out[0])
 
     # -- admission -----------------------------------------------------
@@ -402,7 +448,8 @@ class SlotPoolEngine:
         last = logits[:, -1, :]
         if self.scfg.temperature > 0:
             self.key, sub = jax.random.split(self.key)
-            return engine._sample(last, sub, self.scfg.temperature)
+            return engine._sample(last, sub, self.scfg.temperature,
+                                  self.scfg.top_k, self.scfg.top_p)
         return jnp.argmax(last, -1)
 
     def _group_prefill(self, reqs: list[Request]):
@@ -493,6 +540,7 @@ class SlotPoolEngine:
             self.budget[s] = r.max_new - 1
             self.last_tok[s] = tok0[b]
             self.active[s] = True
+            self._drafter_reset(s)
         if slot_idx:
             # reorder the prefilled rows so row j lands in slot_idx[j];
             # pad both index vectors to n_slots (repeating the last pair —
@@ -521,9 +569,17 @@ class SlotPoolEngine:
             pages = self.pool.alloc(n)
         return pages
 
+    def _drafter_reset(self, s: int) -> None:
+        """A slot changed owner: wipe any drafter state tied to it (the
+        model drafter's synced-length watermark; the n-gram drafter is
+        stateless)."""
+        if self.drafter is not None:
+            self.drafter.reset_slot(s)
+
     def _occupy(self, s: int, r: Request, pages: list, length: int,
                 tok0: int) -> None:
         self.slot_rid[s] = r.rid
+        self._drafter_reset(s)
         self.slot_pages[s] = list(pages)
         self.block_tables[s, :] = 0
         self.block_tables[s, :len(pages)] = pages
@@ -734,7 +790,12 @@ class SlotPoolEngine:
         """One jitted burst of ``decode_burst`` masked steps + host
         bookkeeping: append emitted tokens, finalize newly freed slots.
         Paged mode first appends the pages the burst will write (possibly
-        preempting) and refreshes the device block tables."""
+        preempting) and refreshes the device block tables.  In spec mode
+        the burst is ONE speculative step: draft, verify, accept, roll
+        back."""
+        if self.spec:
+            self._spec_burst(now)
+            return
         if self.paged:
             self._ensure_burst_pages(max(1, self.scfg.decode_burst))
             if not self.active.any():  # everyone preempted: nothing to run
@@ -756,6 +817,7 @@ class SlotPoolEngine:
         self.last_tok = np.array(tok)[:, 0]
         self.stats["bursts"] += 1
         self.stats["burst_steps"] += emits.shape[0]
+        self.stats["model_calls"] += emits.shape[0]
         self.stats["slot_steps_active"] += int((emits != PAD).sum())
         for s in np.nonzero(was_active)[0]:
             toks = emits[:, s]
@@ -767,6 +829,97 @@ class SlotPoolEngine:
                 self.slot_rid[s] = None
                 if self.paged:
                     self._release_slot_pages(s)
+
+    # -- speculative decode (repro/serve/spec.py; DESIGN.md §11) --------
+
+    def _spec_burst(self, now: float) -> None:
+        """One speculative step over the whole pool: host-side drafting
+        (per-slot ragged lengths), ONE jitted verify call scoring
+        ``draft_k + 1`` lanes per slot, longest-accepted-prefix emission
+        with EOS/budget on accepted tokens only, then KV rollback — dense
+        slots rewind by length alone; paged slots also un-append the tail
+        pages the rejected lanes wrote into."""
+        scfg = self.scfg
+        K = scfg.draft_k
+        if self.paged:
+            # verify writes lanes L..L+m (m <= min(K, budget-1)): cover the
+            # worst case before the call, preempting on pool exhaustion
+            self._ensure_burst_pages(K + 1)
+            if not self.active.any():  # everyone preempted: nothing to run
+                return
+            self.cache["block_tables"] = jnp.asarray(self.block_tables)
+        n = scfg.n_slots
+        want = np.zeros(n, np.int32)
+        contexts: list = [None] * n
+        for s in range(n):
+            if not self.active[s]:
+                continue
+            # drafts past budget-1 can never be emitted, and the verify
+            # write frontier must stay inside max_len
+            want[s] = max(0, min(K, int(self.budget[s]) - 1,
+                                 scfg.max_len - 1 - int(self.lengths[s])))
+            rid = self.slot_rid[s]
+            contexts[s] = np.concatenate(
+                [np.asarray(self.requests[rid].tokens, np.int32),
+                 np.asarray(self.outputs[rid], np.int32)])
+        calls0 = self.drafter.model_calls
+        draft, n_draft = self.drafter.draft_batch(contexts, want, K)
+        # a model drafter's teacher-sync/draft-loop invocations count too,
+        # so tokens-per-model-call never overstates the amortization
+        self.stats["model_calls"] += self.drafter.model_calls - calls0
+
+        was_active = self.active.copy()
+        emitted, self.cache, tok, lengths, active, budget, n_acc = \
+            self._spec_step(self.params, self.cache,
+                            jnp.asarray(self.last_tok)[:, None],
+                            jnp.asarray(draft), jnp.asarray(n_draft),
+                            jnp.asarray(self.lengths),
+                            jnp.asarray(self.active),
+                            jnp.asarray(self.budget))
+        emitted = np.asarray(emitted)                   # (n_slots, K + 1)
+        n_acc = np.asarray(n_acc)
+        self.lengths = np.array(lengths)
+        self.active = np.array(active)
+        self.budget = np.array(budget)
+        self.last_tok = np.array(tok)[:, 0]
+        self.stats["bursts"] += 1
+        self.stats["burst_steps"] += 1
+        self.stats["spec_steps"] += 1
+        self.stats["model_calls"] += 1
+        for s in np.nonzero(was_active)[0]:
+            row = emitted[s]
+            row = row[row != PAD].tolist()
+            self.outputs[self.slot_rid[s]].extend(row)
+            self.stats["tokens_emitted"] += len(row)
+            self.stats["draft_tokens"] += int(n_draft[s])
+            self.stats["accepted_tokens"] += int(n_acc[s])
+            if row:
+                self.stats["slot_steps_active"] += 1
+            if not self.active[s]:                      # freed on device
+                self._finish(self.slot_rid[s], now)
+                self.slot_rid[s] = None
+                if self.paged:
+                    self._release_slot_pages(s)
+        if self.paged:
+            self._rollback_spec_pages()
+
+    def _rollback_spec_pages(self) -> None:
+        """Un-append tail pages past each active slot's post-acceptance
+        length — the rejected verify lanes' pages.  Refcount-correct by
+        construction: only pages popped off the slot's OWN table are
+        decref'd, so a page the radix trie also references survives at the
+        trie's count; and since lengths never shrink, the keep point can
+        never reach back into the prompt's (possibly trie-shared) pages —
+        only ever into this burst's fresh appends."""
+        ps = self.scfg.page_size
+        for s in range(self.scfg.n_slots):
+            if not self.active[s]:
+                continue
+            keep = -(-int(self.lengths[s]) // ps)
+            while len(self.slot_pages[s]) > keep:
+                p = self.slot_pages[s].pop()
+                self.block_tables[s, len(self.slot_pages[s])] = 0
+                self.pool.decref(p)
 
     # -- the serving loop ----------------------------------------------
 
@@ -782,7 +935,7 @@ class SlotPoolEngine:
                     f"{r.max_new} exceeds max_len {self.scfg.max_len}")
         queue = self._queue = deque(sorted(requests, key=lambda r: r.arrival))
         t0 = time.perf_counter()
-        continuous = self.scfg.scheduler == "continuous"
+        continuous = self.scfg.scheduler in ("continuous", "spec")
         while queue or self.active.any():
             now = time.perf_counter() - t0
             free = int((~self.active).sum())  # slot_rid is None iff inactive
@@ -804,8 +957,9 @@ class SlotPoolEngine:
 
 
 def serve(model, params, requests: list[Request], scfg: ServeConfig,
-          key=None) -> dict[int, Completion]:
-    """One-shot entry: build a slot-pool engine, serve, return completions."""
-    eng = SlotPoolEngine(model, params, scfg, key=key)
+          key=None, draft=None) -> dict[int, Completion]:
+    """One-shot entry: build a slot-pool engine, serve, return completions.
+    ``draft``: optional (model, params) pair for ``spec_mode="model"``."""
+    eng = SlotPoolEngine(model, params, scfg, key=key, draft=draft)
     eng.run(requests)
     return eng.completions

@@ -1,0 +1,350 @@
+"""Speculative decoding: self-drafting, batched Hyft verify, KV rollback.
+
+Decode is latency-bound on softmax-heavy one-token steps — the exact regime
+the paper builds the reconfigurable datapath for.  Speculative decoding
+converts those steps into prefill-shaped multi-token verification: draft K
+cheap tokens per slot, score ``[last_token, draft_1..K]`` in ONE model call
+through the masked prefill-style Hyft path, and keep the longest accepted
+prefix.  The softmax work batches along the sequence axis (the regime the
+Samsung softmax-approximation line also identifies as the cheap one), so
+every accepted draft amortizes the per-call overhead that dominates decode.
+Verification is exact: a drafter only moves the acceptance rate, never the
+output.
+
+Three pieces (DESIGN.md §11):
+
+  drafters  — ``NgramDrafter``: deterministic prompt-lookup self-drafting
+              (no second model), so greedy spec decode is token-for-token
+              identical to vanilla greedy decode by construction.
+              ``ModelDrafter``: a small zoo model sharing the slot pool
+              with its own dense KV cache, synced lazily by teacher-forcing
+              the tokens the target accepted since the last draft.
+  verify    — ``build_spec_step``: one jitted call running
+              ``model.verify_step`` (the split-K ``flash_hyft_verify``
+              kernel under ``attn_mode="kernel"``, dense or paged,
+              fp2fx8 dequant fused into the loads), then the
+              longest-accepted-prefix selection with EOS/budget applied to
+              ACCEPTED tokens only — all on device.
+  rollback  — rejected lanes need no KV undo: they sit past the slot's
+              post-acceptance length, invisible to the ``kv_index <=
+              position`` mask until overwritten (dense rewind-by-length).
+              Paged slots additionally un-append tail pages in the
+              scheduler (``SlotPoolEngine._rollback_spec_pages``),
+              refcount-correct so radix-trie-shared pages are untouched.
+
+The scheduler integration (``ServeConfig.scheduler = "spec"``) lives in
+``repro.serve.scheduler``; this module is the drafting + verify arithmetic.
+
+Exactness caveat — MoE: capacity-bounded expert routing dispatches tokens
+batch-globally, so scoring ``K + 1`` lanes per slot routes (and drops)
+differently than one-token steps would.  This is the SAME parity exception
+the slot-pool scheduler already documents for any batched MoE serving
+(DESIGN.md §9) with one more coupling axis: under spec, greedy MoE outputs
+may differ from the sequential greedy trajectory, not just from a solo
+run.  Attention-family dense/vlm models carry the full token-for-token
+guarantee (`tests/test_spec_decode.py`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.serve import engine
+from repro.serve.scheduler import PAD, _bucket  # one emitted-lane filler
+
+I32 = jnp.int32
+
+
+# --------------------------------------------------------------------------
+# drafters
+# --------------------------------------------------------------------------
+
+
+class NgramDrafter:
+    """Prompt-lookup / n-gram self-drafting (no second model).
+
+    The draft for a context is the continuation of the most recent earlier
+    occurrence of the context's longest trailing n-gram (n from
+    ``ngram_max`` down to 1, recency winning ties — repetitive contexts
+    keep drafting from their latest loop iteration).  Deterministic and
+    model-free: every draft is a literal continuation of the context, and a
+    wrong draft costs only its rejected verify lanes.
+    """
+
+    model_calls = 0  # drafting never invokes a model
+
+    def __init__(self, ngram_max: int = 3, window: int = 1024):
+        if ngram_max < 1:
+            raise ValueError("ngram_max must be >= 1")
+        self.ngram_max = ngram_max
+        # the lookup scans only the most recent ``window`` tokens: recency
+        # wins anyway, and an unbounded scan would make host drafting
+        # O(L^2) over a long request's lifetime
+        self.window = window
+
+    def draft(self, context, k: int) -> np.ndarray:
+        """Up to ``k`` draft tokens continuing ``context`` ((L,) ints);
+        empty when no trailing n-gram recurs earlier in the context.
+
+        Among occurrences of the trailing n-gram, the most recent one with
+        a FULL ``k``-token continuation wins; if every recent occurrence is
+        cut off by the context end (the tail of a tight repeat loop), the
+        most recent one is used anyway — a short draft beats none.
+        """
+        ctx = np.asarray(context, np.int64)[-self.window:]
+        L = len(ctx)
+        if k <= 0 or L < 2:
+            return np.empty(0, np.int32)
+        for n in range(min(self.ngram_max, L - 1), 0, -1):
+            pat = ctx[L - n:]
+            # one vectorized sliding-window match per n — this runs on the
+            # host every spec burst for every slot, so no Python-level scan
+            win = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+            hits = np.flatnonzero((win == pat).all(axis=1))
+            if hits.size == 0:
+                continue
+            full = hits[hits + n + k <= L]
+            best = int(full[-1]) if full.size else int(hits[-1])
+            return ctx[best + n:best + n + k].astype(np.int32)
+        return np.empty(0, np.int32)
+
+    def reset_slot(self, s: int) -> None:  # stateless: nothing to reset
+        pass
+
+    def draft_batch(self, contexts, want, k: int):
+        """Per-slot drafts.  ``contexts``: list of per-slot token arrays
+        (None = slot idle); ``want`` (n_slots,): per-slot draft budget.
+        Returns (draft (n_slots, k) int32, n_draft (n_slots,) int32)."""
+        n = len(contexts)
+        draft = np.zeros((n, k), np.int32)
+        n_draft = np.zeros(n, np.int32)
+        for s, ctx in enumerate(contexts):
+            if ctx is None or want[s] <= 0:
+                continue
+            d = self.draft(ctx, int(min(want[s], k)))
+            n_draft[s] = len(d)
+            draft[s, :len(d)] = d
+        return draft, n_draft
+
+
+_DRAFT_LOOP_CACHE: dict = {}
+
+
+def _draft_loop(model, steps: int, max_len: int):
+    """Jit'd greedy draft continuation over the DRAFT model's slot cache:
+    (params, cache, tok0 (B,1), pos0 (B,), gate (B,)) ->
+    ((B, steps) tokens, cache).  Writes gate off past ``max_len`` so a
+    nearly-full slot can keep drafting for its neighbours' chunk width."""
+    ck = (model.cfg, steps, max_len)
+    if ck in _DRAFT_LOOP_CACHE:
+        return _DRAFT_LOOP_CACHE[ck]
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def loop(params, cache, tok0, pos0, gate):
+        def body(carry, i):
+            cache_c, tok = carry
+            wm = gate & (pos0 + i < max_len)
+            logits, cache_c = model.decode_step(params, cache_c, tok,
+                                                pos0 + i, write_mask=wm)
+            nxt = jnp.argmax(logits[:, -1, :], -1).astype(I32)[:, None]
+            return (cache_c, nxt), nxt[:, 0]
+
+        (cache, _), toks = jax.lax.scan(body, (cache, tok0),
+                                        jnp.arange(steps, dtype=I32))
+        return toks.T, cache
+
+    return engine._cache_put(_DRAFT_LOOP_CACHE, ck, loop)
+
+
+class ModelDrafter:
+    """Small-model drafter sharing the slot pool.
+
+    The draft model keeps its own dense KV cache over the SAME slot ids and
+    syncs lazily: before drafting, the tokens the target accepted since the
+    drafter's last sync are teacher-forced into its cache
+    (``engine.build_teacher_loop`` — the executable the prefix cache
+    already uses), then ``k`` greedy draft tokens are decoded.  Draft
+    writes past the context roll back by length exactly like the target's
+    own rewind: the next sync overwrites them.
+
+    The draft model must share the target's vocab; its quality only moves
+    the acceptance rate — verification is exact, so the output never
+    changes.
+    """
+
+    def __init__(self, model, params, scfg: ServeConfig):
+        from repro.models import resolve_attn_mode
+        self.model = resolve_attn_mode(model, scfg.attn_mode)
+        self.params = params
+        self.scfg = scfg
+        n = scfg.n_slots
+        # drafts are advisory: the draft cache stays dense float32 whatever
+        # the target's layout — a drafter never pages and never quantizes
+        self.cache = self.model.init_cache(params, n, scfg.max_len,
+                                           "float32")
+        self.d_len = np.zeros(n, np.int32)  # tokens synced per slot
+        # jitted draft-model invocations (teacher syncs + draft loops) —
+        # the scheduler folds the per-burst delta into stats["model_calls"]
+        # so tokens-per-model-call stays honest for the model drafter
+        self.model_calls = 0
+
+    def reset_slot(self, s: int) -> None:
+        self.d_len[s] = 0
+
+    def draft_batch(self, contexts, want, k: int):
+        n = self.scfg.n_slots
+        draft = np.zeros((n, k), np.int32)
+        n_draft = np.zeros(n, np.int32)
+        gate = np.zeros(n, bool)
+        delta = np.ones(n, np.int32)
+        for s, ctx in enumerate(contexts):
+            if ctx is None or want[s] <= 0:
+                continue
+            gate[s] = True
+            delta[s] = len(ctx) - self.d_len[s]
+        if not gate.any() or k <= 0:
+            return draft, n_draft
+        assert delta.min() >= 1, "drafter context shrank or did not grow"
+
+        # ---- sync: teacher-force the un-synced context suffix ------------
+        m = _bucket(int(delta.max()), lo=1)
+        toks = np.zeros((n, m), np.int32)
+        start = np.array(self.d_len, np.int32)
+        nv = np.ones(n, np.int32)
+        for s, ctx in enumerate(contexts):
+            if not gate[s]:
+                continue
+            suf = np.asarray(ctx, np.int32)[self.d_len[s]:]
+            toks[s, :len(suf)] = suf
+            nv[s] = len(suf)
+        teacher = engine.build_teacher_loop(self.model, self.scfg, m)
+        last, self.cache = teacher(self.params, self.cache,
+                                   jnp.asarray(toks), jnp.asarray(start),
+                                   jnp.asarray(nv), jnp.asarray(gate))
+        self.model_calls += 1
+        d1 = np.asarray(jnp.argmax(last, -1), np.int32)
+
+        # ---- draft: k - 1 more greedy tokens, then rewind by length ------
+        pos0 = np.array([len(ctx) if gate[s] else 0
+                         for s, ctx in enumerate(contexts)], np.int32)
+        rest = None
+        if k > 1:
+            loop = _draft_loop(self.model, k - 1, self.scfg.max_len)
+            rest, self.cache = loop(self.params, self.cache,
+                                    jnp.asarray(d1)[:, None],
+                                    jnp.asarray(pos0), jnp.asarray(gate))
+            self.model_calls += 1
+            rest = np.asarray(rest)
+        for s in range(n):
+            if not gate[s]:
+                continue
+            row = np.concatenate([[d1[s]], rest[s]]) if k > 1 \
+                else np.array([d1[s]], np.int32)
+            w = int(min(want[s], k))
+            n_draft[s] = w
+            draft[s, :w] = row[:w]
+            self.d_len[s] = len(contexts[s])  # rollback: drafts not kept
+        return draft, n_draft
+
+
+# --------------------------------------------------------------------------
+# jitted verify + longest-accepted-prefix step
+# --------------------------------------------------------------------------
+
+
+_SPEC_CACHE: dict = {}
+
+
+def build_spec_step(model, scfg: ServeConfig, k: int):
+    """Jit'd (params, cache, last_tok (B,1), draft (B,k), n_draft (B,),
+    lengths (B,), active (B,), budget (B,)) -> (emitted (B, k+1)
+    PAD-padded, cache, last_tok, lengths, active, budget, n_acc (B,)).
+
+    One ``model.verify_step`` call scores ``[last_tok, draft_1..k]``: lane
+    ``j``'s argmax is the token sequential greedy decode would emit after
+    ``j`` accepted drafts, so the longest prefix with ``draft[j] ==
+    argmax[j-1]`` (a cumprod of matches — monotone, no scan) IS the vanilla
+    continuation, and one bonus token always comes free from the lane after
+    it.  EOS and budget act on ACCEPTED tokens only: emission truncates at
+    the first EOS / remaining budget, each slot's length advances by its
+    emitted count (the dense KV rewind — rejected lanes sit past the new
+    length, masked until overwritten), and ``active`` drops on device
+    exactly as in the plain burst.  Greedy-only by design: sampled
+    acceptance needs the top-k/top-p machinery as a distribution, not a
+    filter (the groundwork is in ``engine._sample``).
+    """
+    eos = scfg.eos_id
+    S = k + 1
+    ck = (model.cfg, scfg, k)
+    if ck in _SPEC_CACHE:
+        return _SPEC_CACHE[ck]
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def step(params, cache, last_tok, draft, n_draft, lengths, active,
+             budget):
+        toks = jnp.concatenate([last_tok, draft], axis=1)          # (B, S)
+        n_valid = jnp.where(active, n_draft + 1, 1)
+        logits, cache = model.verify_step(params, cache, toks, lengths,
+                                          n_valid=n_valid,
+                                          write_mask=active)
+        greedy = jnp.argmax(logits, -1).astype(I32)                # (B, S)
+        lane = jnp.arange(S, dtype=I32)[None]
+        dmask = jnp.arange(k, dtype=I32)[None] < n_draft[:, None]
+        match = (draft == greedy[:, :-1]) & dmask
+        n_acc = jnp.sum(jnp.cumprod(match.astype(I32), axis=1), axis=1)
+        n_emit = jnp.minimum(n_acc + 1, budget)
+        if eos is not None:
+            is_eos = (greedy == eos) & (lane < n_emit[:, None])
+            first = jnp.min(jnp.where(is_eos, lane, S), axis=1)
+            n_emit = jnp.minimum(n_emit, first + 1)
+            hit_eos = first < S
+        else:
+            hit_eos = jnp.zeros(active.shape, bool)
+        n_emit = jnp.where(active, n_emit, 0)
+        emitted = jnp.where(lane < n_emit[:, None], greedy, PAD)
+        pick = jnp.maximum(n_emit - 1, 0)[:, None]
+        new_last = jnp.take_along_axis(greedy, pick, axis=1)[:, 0]
+        last_tok = jnp.where(active, new_last, last_tok[:, 0])[:, None]
+        lengths = lengths + n_emit
+        budget = budget - n_emit
+        active = active & (budget > 0) & ~hit_eos
+        return emitted, cache, last_tok, lengths, active, budget, n_acc
+
+    return engine._cache_put(_SPEC_CACHE, ck, step)
+
+
+def make_drafter(scfg: ServeConfig, target_cfg, draft=None):
+    """Resolve ``scfg.spec_mode`` to a drafter instance.
+
+    ``draft``: optional (model, params) pair for ``spec_mode="model"`` —
+    required unless ``scfg.draft_model`` names a zoo arch, in which case a
+    RANDOM-init smoke drafter is built (vocab-aligned to the target; a
+    demo drafter whose acceptance floor is chance, not a good one).
+    """
+    if scfg.spec_mode == "ngram":
+        return NgramDrafter(scfg.ngram_max)
+    if scfg.spec_mode == "model":
+        if draft is None:
+            if not scfg.draft_model:
+                raise ValueError(
+                    "spec_mode='model' needs draft=(model, params) or "
+                    "ServeConfig.draft_model naming a zoo arch")
+            from repro.configs import get_config, smoke_config
+            from repro.models import build_model
+            from repro.models.layers import unbox
+            dcfg = smoke_config(get_config(scfg.draft_model)).with_(
+                vocab=target_cfg.vocab,
+                softmax_impl=target_cfg.softmax_impl)
+            dmodel = build_model(dcfg)
+            draft = (dmodel, unbox(dmodel.init(jax.random.PRNGKey(1))))
+        dmodel, dparams = draft
+        if dmodel.cfg.vocab != target_cfg.vocab:
+            raise ValueError(
+                f"draft model vocab {dmodel.cfg.vocab} != target vocab "
+                f"{target_cfg.vocab}")
+        return ModelDrafter(dmodel, dparams, scfg)
+    raise ValueError(f"unknown spec_mode {scfg.spec_mode!r}")
