@@ -1,7 +1,7 @@
 """Serving benchmark: continuous vs lockstep, paged+prefix-cache vs dense,
-speculative vs plain continuous decode.
+speculative vs plain continuous decode, chunked vs whole-prompt prefill.
 
-Three workloads through ``repro.serve.scheduler``:
+Four workloads through ``repro.serve.scheduler``:
 
   mixed-length Poisson — the PR 3 comparison: ``lockstep`` admission (drain
       the slot pool between groups) vs ``continuous`` (admit into freed
@@ -23,19 +23,28 @@ Three workloads through ``repro.serve.scheduler``:
       records the acceptance rate and tokens-per-model-call alongside
       tokens/sec.  Greedy outputs are identical by construction, so the
       comparison isolates the decode strategy.
+  mixed long/short — short interactive prompts share the pool with long
+      ones (the head-of-line-blocking regime chunked prefill exists for),
+      served whole-prompt (``prefill_chunk=0``: an admitted prompt's whole
+      prefill runs as one call before the next decode burst) and chunked
+      (``prefill_chunk=N``: at most N prompt tokens between bursts).
+      Outputs are identical; the benchmark records TTFT and
+      time-between-tokens (TBT) p50/p99, where bounded prefill stalls show
+      up directly as a lower TBT tail.
 
 Reports aggregate tokens/sec, request latency p50/p99 (completion − Poisson
-arrival), and mean slot occupancy; results land in ``BENCH_serve.json``
-(CI runs ``--smoke`` and asserts continuous >= lockstep and paged+prefix
->= dense on their respective workloads).
+arrival), TTFT/TBT percentiles, and mean slot occupancy; results land in
+``BENCH_serve.json`` (CI runs ``--smoke`` and asserts continuous >=
+lockstep, paged+prefix >= dense, and chunked p99 TBT < whole-prompt on
+their respective workloads).
 
 Absolute numbers are CPU times (Pallas in interpreter mode; on TPU it is
 the compiled path) — read the relative trends.  Note the FIRST engine run
 in a process pays a one-time runtime warm-up (XLA thread pools, allocator
 arenas — beyond what ``prewarm``'s executable compilation covers), so each
 section is most comparable when run standalone (``--prefix-only`` /
-``--spec-only``, the CI jobs' shape); ``--merge`` lets those standalone
-runs update one shared JSON.
+``--spec-only`` / ``--chunked-only``, the CI jobs' shape); ``--merge``
+lets those standalone runs update one shared JSON.
 """
 from __future__ import annotations
 
@@ -111,7 +120,22 @@ def make_repetitive_workload(cfg, n, rng, motif_len, reps, tail, new,
     return reqs
 
 
+def _latency_stats(done):
+    """TTFT (first token − arrival) and TBT (successive token-emission
+    gaps, pooled across requests) percentiles, in milliseconds."""
+    ttft = np.array([c.ttft for c in done.values()])
+    gaps = [np.diff(c.token_times) for c in done.values()
+            if len(c.token_times) > 1]
+    tbt = np.concatenate(gaps) if gaps else np.zeros(1)
+    return {"ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+            "tbt_p50_ms": float(np.percentile(tbt, 50) * 1e3),
+            "tbt_p99_ms": float(np.percentile(tbt, 99) * 1e3)}
+
+
 def run_engine(model, params, reqs, scfg):
+    """Serve ``reqs`` on a prewarmed engine; returns (metrics dict,
+    completions dict) — callers compare completions across engines."""
     from repro.serve.scheduler import SlotPoolEngine
     eng = SlotPoolEngine(model, params, scfg)
     # compile every admission/burst shape up front: admission group shapes
@@ -127,6 +151,7 @@ def run_engine(model, params, reqs, scfg):
     occ = (st["slot_steps_active"] /
            max(1, st["burst_steps"] * scfg.n_slots))
     out = {"scheduler": scfg.scheduler, "kv_layout": scfg.kv_layout,
+           "prefill_chunk": scfg.prefill_chunk,
            "wall_s": wall, "tokens": tokens,
            "tokens_per_s": tokens / wall,
            "p50_ms": float(np.percentile(lat, 50) * 1e3),
@@ -137,6 +162,7 @@ def run_engine(model, params, reqs, scfg):
            "model_calls": st["model_calls"],
            "tokens_per_model_call": (st["tokens_emitted"] /
                                      max(1, st["model_calls"]))}
+    out.update(_latency_stats(done))
     if scfg.scheduler == "spec":
         out.update(
             acceptance_rate=(st["accepted_tokens"] /
@@ -150,17 +176,37 @@ def run_engine(model, params, reqs, scfg):
             cached_tokens=st["cached_tokens"],
             pages_peak=st["pages_peak"],
             preemptions=st["preemptions"])
-    return out
+    return out, done
+
+
+def make_mixed_workload(cfg, n, rng, short, long_, frac_long, new, rate_hz):
+    """``n`` requests mixing short interactive prompts (length U[short])
+    with long ones (U[long_], probability ``frac_long``) — the
+    head-of-line-blocking shape where a long arrival's whole-prompt prefill
+    stalls every in-flight decode, which chunked prefill bounds."""
+    from repro.serve.scheduler import Request
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    reqs = []
+    for i in range(n):
+        plen = (int(rng.integers(long_[0], long_[1] + 1))
+                if rng.random() < frac_long
+                else int(rng.integers(short[0], short[1] + 1)))
+        reqs.append(Request(
+            rid=i, tokens=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new=int(rng.integers(new[0], new[1] + 1)),
+            arrival=float(arrivals[i])))
+    return reqs
 
 
 def run(report, smoke: bool = False, prefix_only: bool = False,
-        spec_only: bool = False):
+        spec_only: bool = False, chunked_only: bool = False):
     """Returns the machine-readable results dict (also printed as CSV).
 
-    ``prefix_only`` runs just the shared-prefix section and ``spec_only``
-    just the repetitive/speculative section — the paged-serve and
-    spec-serve CI jobs each assert on one comparison and need not pay for
-    the others.
+    ``prefix_only`` runs just the shared-prefix section, ``spec_only`` just
+    the repetitive/speculative section, and ``chunked_only`` just the mixed
+    long/short chunked-prefill section — the paged-serve, spec-serve, and
+    chunked-serve CI jobs each assert on one comparison and need not pay
+    for the others.
     """
     from repro.configs.base import ServeConfig
     cfg, model, params = _build()
@@ -176,6 +222,9 @@ def run(report, smoke: bool = False, prefix_only: bool = False,
     # or as part of the full sweep, so --merge'd JSONs stay comparable
     rng = np.random.default_rng(0)
     results: dict = {}
+    if chunked_only:
+        return _run_chunked(report, results, cfg, model, params,
+                            np.random.default_rng(3), smoke)
     if not prefix_only and not spec_only:
         reqs = make_workload(cfg, n, rng, plen, new, rate)
         max_len = plen[1] + new[1] + 1
@@ -191,7 +240,7 @@ def run(report, smoke: bool = False, prefix_only: bool = False,
             scfg = ServeConfig(max_len=max_len, cache_dtype="float32",
                                scheduler=mode, n_slots=slots,
                                decode_burst=burst)
-            r = run_engine(model, params, reqs, scfg)
+            r, _ = run_engine(model, params, reqs, scfg)
             results["engines"][mode] = r
             report(f"bench_serve,{mode},"
                    f"tokens_per_s={r['tokens_per_s']:.1f},"
@@ -230,7 +279,7 @@ def run(report, smoke: bool = False, prefix_only: bool = False,
         scfg = ServeConfig(max_len=pmax_len, cache_dtype="float32",
                            scheduler="continuous", n_slots=pslots,
                            decode_burst=burst, **kw)
-        r = run_engine(model, params, preqs, scfg)
+        r, _ = run_engine(model, params, preqs, scfg)
         results["prefix_engines"][name] = r
         extra = (f",hit_rate={r['prefix_hit_rate']:.2f},"
                  f"pages_peak={r['pages_peak']},"
@@ -245,8 +294,10 @@ def run(report, smoke: bool = False, prefix_only: bool = False,
     report(f"bench_serve,speedup,paged_prefix_vs_dense={pspeed:.2f}")
     if prefix_only:
         return results
-    return _run_spec(report, results, cfg, model, params,
-                     np.random.default_rng(2), smoke, burst)
+    results = _run_spec(report, results, cfg, model, params,
+                        np.random.default_rng(2), smoke, burst)
+    return _run_chunked(report, results, cfg, model, params,
+                        np.random.default_rng(3), smoke)
 
 
 def _run_spec(report, results, cfg, model, params, rng, smoke, burst):
@@ -282,7 +333,7 @@ def _run_spec(report, results, cfg, model, params, rng, smoke, burst):
                      ("spec", dict(scheduler="spec", draft_k=skk))):
         scfg = ServeConfig(max_len=smax_len, cache_dtype="float32",
                            n_slots=sslots, decode_burst=burst, **kw)
-        r = run_engine(model, params, sreqs, scfg)
+        r, _ = run_engine(model, params, sreqs, scfg)
         results["spec_engines"][name] = r
         extra = (f",acceptance={r['acceptance_rate']:.2f},"
                  f"tok_per_call={r['tokens_per_model_call']:.2f}"
@@ -295,6 +346,60 @@ def _run_spec(report, results, cfg, model, params, rng, smoke, burst):
               results["spec_engines"]["baseline"]["tokens_per_s"])
     results["spec_vs_baseline"] = sspeed
     report(f"bench_serve,speedup,spec_vs_baseline={sspeed:.2f}")
+    return results
+
+
+def _run_chunked(report, results, cfg, model, params, rng, smoke):
+    """Mixed long/short workload: chunked vs whole-prompt prefill.
+
+    Same admission policy, slots, and decode bursts — the only difference
+    is ``prefill_chunk``, so the TBT tail isolates what bounding the
+    per-burst prefill stall buys: in whole-prompt mode a long arrival's
+    entire prefill runs between two decode bursts and every in-flight
+    request's inter-token gap eats it; chunked mode caps that stall at one
+    chunk's worth of tokens.  Outputs are identical by construction (the
+    chunk split is invisible to the arithmetic) — recorded in the results
+    so CI can assert it.
+    """
+    from repro.configs.base import ServeConfig
+    if smoke:
+        cn, cshort, clong, cfrac, cnew, crate, cslots, cburst, chunk = \
+            10, (3, 8), (48, 72), 0.3, (8, 24), 150.0, 4, 4, 8
+    else:
+        cn, cshort, clong, cfrac, cnew, crate, cslots, cburst, chunk = \
+            24, (4, 12), (96, 128), 0.3, (16, 48), 80.0, 8, 8, 16
+    creqs = make_mixed_workload(cfg, cn, rng, cshort, clong, cfrac, cnew,
+                                crate)
+    cmax_len = clong[1] + cnew[1] + 1
+    results["chunked_workload"] = {
+        "requests": cn, "short_len": list(cshort), "long_len": list(clong),
+        "frac_long": cfrac, "max_new": list(cnew), "poisson_rate_hz": crate,
+        "n_slots": cslots, "decode_burst": cburst, "prefill_chunk": chunk,
+        "total_tokens": sum(r.max_new for r in creqs)}
+    report(f"bench_serve,chunked_workload,requests={cn},short={cshort},"
+           f"long={clong},chunk={chunk}")
+    results["chunked_engines"] = {}
+    outs = {}
+    for name, pchunk in (("whole_prompt", 0), ("chunked", chunk)):
+        scfg = ServeConfig(max_len=cmax_len, cache_dtype="float32",
+                           scheduler="continuous", n_slots=cslots,
+                           decode_burst=cburst, prefill_chunk=pchunk)
+        r, done = run_engine(model, params, creqs, scfg)
+        results["chunked_engines"][name] = r
+        outs[name] = {rid: c.tokens for rid, c in done.items()}
+        report(f"bench_serve,chunked_{name},"
+               f"tokens_per_s={r['tokens_per_s']:.1f},"
+               f"ttft_p50_ms={r['ttft_p50_ms']:.0f},"
+               f"ttft_p99_ms={r['ttft_p99_ms']:.0f},"
+               f"tbt_p50_ms={r['tbt_p50_ms']:.1f},"
+               f"tbt_p99_ms={r['tbt_p99_ms']:.1f}")
+    results["chunked_outputs_equal"] = outs["chunked"] == outs["whole_prompt"]
+    ratio = (results["chunked_engines"]["whole_prompt"]["tbt_p99_ms"] /
+             max(1e-9, results["chunked_engines"]["chunked"]["tbt_p99_ms"]))
+    results["whole_prompt_vs_chunked_tbt_p99"] = ratio
+    report(f"bench_serve,chunked,outputs_equal="
+           f"{results['chunked_outputs_equal']},"
+           f"tbt_p99_whole_over_chunked={ratio:.2f}")
     return results
 
 
@@ -313,6 +418,9 @@ if __name__ == "__main__":
     ap.add_argument("--spec-only", action="store_true",
                     help="run only the repetitive-workload (speculative vs "
                          "continuous) section")
+    ap.add_argument("--chunked-only", action="store_true",
+                    help="run only the mixed long/short-prompt (chunked vs "
+                         "whole-prompt prefill) section")
     ap.add_argument("--merge", action="store_true",
                     help="update an existing --json file in place (a "
                          "section-only run keeps the other sections' "
@@ -320,7 +428,7 @@ if __name__ == "__main__":
                          "own fresh process)")
     args = ap.parse_args()
     res = run(print, smoke=args.smoke, prefix_only=args.prefix_only,
-              spec_only=args.spec_only)
+              spec_only=args.spec_only, chunked_only=args.chunked_only)
     out: dict = {}
     if args.merge and os.path.exists(args.json):
         with open(args.json) as f:

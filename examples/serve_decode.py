@@ -18,6 +18,11 @@ speculative scheduler (n-gram self-drafting + one-call verify bursts,
 an acceptance-rate summary showing how many tokens each model call earned.
 A plain lockstep ``generate`` run closes the tour.
 
+``--prefill-chunk N`` splits every prompt's prefill into N-token chunks
+interleaved with decode bursts (and ``--no-pack-prefill`` feeds one prompt
+at a time instead of packing prefilling slots into one call) — the outputs
+still match token for token; only the latency shape changes.
+
 Run:  PYTHONPATH=src python examples/serve_decode.py [--spec] [--draft-k 4]
 """
 import argparse
@@ -39,6 +44,11 @@ ap.add_argument("--spec", action="store_true",
                      "the acceptance-rate summary")
 ap.add_argument("--draft-k", type=int, default=4,
                 help="draft tokens verified per slot per spec step")
+ap.add_argument("--prefill-chunk", type=int, default=0,
+                help="max prompt tokens per prefill call (0 = whole prompt)")
+ap.add_argument("--pack-prefill", default=True,
+                action=argparse.BooleanOptionalAction,
+                help="pack prefilling slots into one bucketed chunk call")
 args = ap.parse_args()
 
 cfg = smoke_config(get_config("qwen2-1.5b")).with_(softmax_impl="hyft16",
@@ -66,7 +76,9 @@ outs = {}
 for name, kw in variants:
     scfg = ServeConfig(max_len=48, cache_dtype="float32",
                        scheduler=kw.pop("scheduler", "continuous"),
-                       n_slots=4, decode_burst=4, eos_id=None, **kw)
+                       n_slots=4, decode_burst=4, eos_id=None,
+                       prefill_chunk=args.prefill_chunk,
+                       pack_prefill=args.pack_prefill, **kw)
     eng = SlotPoolEngine(model, params, scfg)
     done = eng.run(reqs)
     outs[name] = {rid: c.tokens for rid, c in done.items()}

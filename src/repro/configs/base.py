@@ -149,6 +149,16 @@ class ServeConfig:
     # reuse its pages (refcounted, copy-on-write by page granularity) and
     # skip prefill for the cached tokens (paged layout only)
     prefix_cache: bool = False
+    # --- chunked + packed prefill (DESIGN.md §12) ---
+    # max prompt tokens written per prefill_chunk call (0 = whole prompt in
+    # one call): long prompts split into chunks scheduled BETWEEN decode
+    # bursts, so in-flight decode never stalls longer than one chunk — and
+    # prompts longer than any single compiled bucket become servable
+    prefill_chunk: int = 0
+    # pack every prefilling slot into one bucketed chunk call (per-row
+    # start/lengths keep rows independent); False = one prompt at a time
+    # in arrival order (an ablation/debugging knob)
+    pack_prefill: bool = True
     # --- speculative decoding (repro/serve/spec.py, DESIGN.md §11) ---
     # drafter for scheduler="spec": "ngram" = deterministic prompt-lookup
     # self-drafting (no second model — greedy outputs provably unchanged);

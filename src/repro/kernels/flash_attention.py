@@ -843,10 +843,16 @@ def flash_hyft_verify(q: jax.Array, k: jax.Array, v: jax.Array,
                       block_tables: jax.Array | None = None,
                       k_scale: jax.Array | None = None,
                       v_scale: jax.Array | None = None):
-    """Split-K fused verify attention with Hyft softmax (Sq = draft chunk).
+    """Split-K fused chunk attention with Hyft softmax (Sq = token chunk).
+
+    The kernel behind ``verify_attention``'s kernel mode, and through it
+    ``model.prefill_chunk`` (DESIGN.md §12): prompt-chunk prefill,
+    prefix-hit suffixes, and speculative-decode verify (Sq = draft_k + 1)
+    all lower to this one entry.
 
     Args:
-      q: (B, Hq, Sq, D) — the [last_token, draft_1..draft_K] queries.
+      q: (B, Hq, Sq, D) — the chunk's queries (for verify, the
+        [last_token, draft_1..draft_K] lanes).
       k, v: contiguous (B, Hkv, Sk, D) stripes, or — with ``block_tables``
         (B, nb) — a paged pool (n_pages, Hkv, page_size, D).  Either layout
         may be int8 FP2FX raws with ``k_scale``/``v_scale`` fp32 scales

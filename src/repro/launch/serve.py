@@ -61,7 +61,7 @@ def main():
                     help="'paged' = fixed-size KV pages from a global pool "
                          "with per-slot block tables (attention families; "
                          "decode appends pages on demand, exhaustion "
-                         "preempts the lowest-priority slot)")
+                         "preempts the latest-arrival slot)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page for --kv-layout paged")
     ap.add_argument("--n-pages", type=int, default=0,
@@ -71,6 +71,17 @@ def main():
                     help="radix-trie prompt prefix cache: admissions "
                          "sharing a cached prefix reuse its pages and skip "
                          "prefill for the cached tokens (paged only)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="max prompt tokens per prefill_chunk call (0 = "
+                         "whole prompt in one call): long prompts split "
+                         "into chunks interleaved with decode bursts, so "
+                         "in-flight decode never stalls longer than one "
+                         "chunk")
+    ap.add_argument("--pack-prefill", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="pack every prefilling slot into one bucketed "
+                         "chunk call (--no-pack-prefill = one prompt at a "
+                         "time in arrival order, an ablation knob)")
     ap.add_argument("--batch", type=int, default=4,
                     help="lockstep batch size / continuous request count")
     ap.add_argument("--prefill", type=int, default=16,
@@ -124,17 +135,20 @@ def main():
                        page_size=args.page_size,
                        n_pages=args.n_pages,
                        prefix_cache=args.prefix_cache,
+                       prefill_chunk=args.prefill_chunk,
+                       pack_prefill=args.pack_prefill,
                        spec_mode=args.spec_mode,
                        draft_k=args.draft_k,
                        ngram_max=args.ngram_max,
                        draft_model=args.draft_model)
 
-    # the paged layout, prefix cache, and spec decoding live in the
-    # slot-pool scheduler, so those flags route through it even under
-    # --scheduler lockstep (the rectangular generate path below is
+    # the paged layout, prefix cache, spec decoding, and chunked prefill
+    # live in the slot-pool scheduler, so those flags route through it even
+    # under --scheduler lockstep (the rectangular generate path below is
     # dense-only, non-speculative, and would silently ignore them)
     if (args.scheduler in ("continuous", "spec")
-            or args.kv_layout != "dense" or args.prefix_cache):
+            or args.kv_layout != "dense" or args.prefix_cache
+            or args.prefill_chunk > 0):
         rng = np.random.default_rng(args.seed)
         reqs = []
         for rid in range(args.batch):

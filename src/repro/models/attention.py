@@ -611,7 +611,9 @@ def decode_attention(q, cache, cfg, *, kv_len_mask=None):
 
 
 # --------------------------------------------------------------------------
-# speculative-decode verify (Sq = draft chunk, per-token causal frontier)
+# chunked attend-at-offset (Sq = chunk, per-token causal frontier) — the
+# attention entry behind model.prefill_chunk: prefill chunks, prefix-hit
+# suffixes, and speculative-decode verify all land here (DESIGN.md §12)
 # --------------------------------------------------------------------------
 
 
@@ -632,11 +634,13 @@ def _verify_unfused(q, k, v, softmax_impl: str, kv_pos_mask):
 
 
 def verify_attention(q, cache, cfg, *, kv_pos_mask, block_tables=None):
-    """Attention for the speculative-decode verify step: ``q`` carries the
-    [last_token, draft...] chunk (Sq = K + 1) and ``kv_pos_mask`` (B, Sq,
-    Lk) each token's causal frontier (``kv_index <= pos + t``), so every
-    draft token sees exactly the KV a sequential decode step would have —
-    the prefill-style masked Hyft path applied to the serving cache.
+    """Attend a token chunk at per-row offsets against the serving cache:
+    ``q`` carries a chunk of Sq already-written tokens per row and
+    ``kv_pos_mask`` (B, Sq, Lk) each token's causal frontier (``kv_index
+    <= pos + t``), so every chunk token sees exactly the KV a sequential
+    decode step would have.  This is ``model.prefill_chunk``'s attention
+    (DESIGN.md §12): prompt-chunk prefill, prefix-hit suffixes, and
+    speculative-decode verify (Sq = draft_k + 1) are all this one call.
 
     With a Hyft softmax and ``attn_mode="kernel"`` this is the split-K
     verify kernel (dense stripes or — with ``block_tables`` — the paged

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models.layers import embed_init, embed_lookup, make_norm, param, unembed
-from repro.models.transformer import _remat, _stack, logits_fn
+from repro.models.transformer import (_prefill_chunk_scan, _remat, _stack,
+                                      logits_fn)
 
 F32 = jnp.float32
 
@@ -219,3 +220,21 @@ def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
     x = norm_fn(params["final_norm"], x)
     logits = logits_fn(params, x, cfg.with_(tie_embeddings=True))
     return logits, {"self": new_self, "memory": cache["memory"]}
+
+
+def prefill_chunk(params, cache, tokens, start, cfg, lengths=None,
+                  write_mask=None):
+    """Chunked attend-at-offset over the decoder (same contract as
+    ``transformer.prefill_chunk``): lane ``i`` of the (B, S) chunk writes
+    self-KV at ``start + i`` gated by ``write_mask & (i < lengths)`` and
+    cross-attends the cached encoder memory — ``cache["memory"]`` must
+    already hold each row's encoding.  Returns (logits (B, S, V), cache)."""
+    B = tokens.shape[0]
+    pos_b = (jnp.asarray(start, jnp.int32).reshape(B) if jnp.ndim(start) >= 1
+             else jnp.full((B,), start, jnp.int32))
+    nv = (jnp.full((B,), tokens.shape[1], jnp.int32) if lengths is None
+          else jnp.asarray(lengths, jnp.int32))
+    return _prefill_chunk_scan(
+        params, cache, tokens, pos_b, cfg, nv, write_mask,
+        lambda p, c, t, pos, wm: decode_step(p, c, t, pos, cfg,
+                                             write_mask=wm))

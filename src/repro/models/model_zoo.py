@@ -29,9 +29,15 @@ class Model:
     init_cache: Callable
     # paged serving cache (attention families only; None = layout unsupported)
     init_paged_cache: Any = None
-    # speculative-decode verify: score a (B, S) draft chunk in one forward
-    # (attention families only; None = spec decoding unsupported)
-    verify_step: Any = None
+    # chunked attend-at-offset prefill: write a (B, S) token chunk at
+    # per-row positions and attend the full cached history (the one
+    # primitive behind admission, prefix-hit suffixes, spec verify, and
+    # drafter sync) — (p, c, tokens, start, lengths=, write_mask=) ->
+    # (logits (B, S, V), cache)
+    prefill_chunk: Any = None
+    # encdec only: (params, frames) -> encoder memory (chunked admission
+    # installs it into the slot cache before any prefill_chunk call)
+    encode: Any = None
 
 
 def resolve_attn_mode(model: Model, attn_mode) -> Model:
@@ -55,6 +61,10 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, c, t, pos, cfg, **kw),
             init_cache=lambda p, batch, max_len, dtype: encdec.init_cache(
                 p, cfg, batch, max_len, dtype),
+            prefill_chunk=lambda p, c, t, start, **kw: encdec.prefill_chunk(
+                p, c, t, start, cfg, **kw),
+            encode=lambda p, frames: encdec.encode(p, frames, cfg,
+                                                   remat="none"),
         )
     return Model(
         cfg=cfg,
@@ -70,10 +80,8 @@ def build_model(cfg: ModelConfig) -> Model:
             (lambda p, n_pages, page_size, dtype: transformer.init_paged_cache(
                 p, cfg, n_pages, page_size, dtype))
             if cfg.family in ("dense", "moe", "vlm") else None),
-        verify_step=(
-            (lambda p, c, t, pos, **kw: transformer.verify_step(
-                p, c, t, pos, cfg, **kw))
-            if cfg.family in ("dense", "moe", "vlm") else None),
+        prefill_chunk=lambda p, c, t, start, **kw: transformer.prefill_chunk(
+            p, c, t, start, cfg, **kw),
     )
 
 

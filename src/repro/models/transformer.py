@@ -390,38 +390,46 @@ def decode_step(params, cache, tokens1, pos, cfg, write_mask=None):
     return logits_fn(params, x, cfg), cache
 
 
-def verify_step(params, cache, tokens, pos, cfg, n_valid=None,
-                write_mask=None):
-    """Speculative-decode verify: score a (B, S) [last_token, draft...]
-    chunk in ONE forward pass — the prefill-shaped model call that spec
-    decode trades K one-token steps for.
+def prefill_chunk(params, cache, tokens, start, cfg, lengths=None,
+                  write_mask=None):
+    """Chunked attend-at-offset: score a (B, S) token chunk in ONE forward
+    pass against the full cached history — the single prefill-shaped
+    primitive behind cold admission, prefix-hit suffixes, spec-decode
+    verify, and the drafter's teacher sync.
 
-    Row ``b``'s tokens write into the cache at ``pos[b] .. pos[b] + S - 1``
-    (write-then-attend, like ``decode_step``) and each token attends under
-    its own causal frontier ``kv_index <= pos[b] + j``, so the logits at
-    lane ``j`` are exactly what a sequential decode would produce after
-    feeding the first ``j`` drafts.  ``n_valid`` (B,) bounds each row's
-    real tokens (ragged drafts; padded lanes never write and their logits
-    are garbage the caller discards); ``write_mask`` (B,) gates whole rows
-    (inactive slots compute but never mutate).  Rollback needs no KV undo:
-    rejected lanes sit past the row's advanced length, invisible to the
-    ``kv_index <= position`` mask until overwritten.
+    Row ``b``'s tokens write into the cache at ``start[b] .. start[b] +
+    S - 1`` (write-then-attend, like ``decode_step``) and each token
+    attends under its own causal frontier ``kv_index <= start[b] + j``, so
+    the logits at lane ``j`` are exactly what a sequential decode would
+    produce after feeding the first ``j`` chunk tokens.  ``lengths`` (B,)
+    bounds each row's real tokens (ragged chunks; padded lanes never write
+    and their logits are garbage the caller discards); ``write_mask`` (B,)
+    gates whole rows (inactive slots compute but never mutate).  A prompt
+    split across successive calls is bitwise identical to one call: every
+    lane reads only cache content, and fp2fx8 quantization is
+    per-(head, position), so chunk boundaries are invisible.  Spec-decode
+    rollback needs no KV undo: rejected lanes sit past the row's advanced
+    length, invisible to the ``kv_index <= position`` mask until
+    overwritten.
 
-    Returns (logits (B, S, V), cache).  Attention families only — SSM /
-    hybrid state is a sequential recurrence with no O(1) rewind, so those
-    families serve non-speculatively.
+    Returns (logits (B, S, V), cache).  Attention families run the one-pass
+    masked chunk (dense or paged cache, fp2fx8 fused dequant,
+    kernel/chunked/unfused dispatch via ``verify_attention``); SSM/hybrid
+    state is a sequential recurrence, so those families scan gated
+    ``decode_step``s — same contract, O(S) steps.
     """
-    if cfg.family not in ("dense", "moe", "vlm"):
-        raise ValueError(
-            f"verify_step needs an attention-family model, got "
-            f"family={cfg.family!r} (SSM/hybrid serve non-speculatively)")
     B, S = tokens.shape
+    pos_b = (jnp.asarray(start, jnp.int32).reshape(B) if jnp.ndim(start) >= 1
+             else jnp.full((B,), start, jnp.int32))
+    nv = (jnp.full((B,), S, jnp.int32) if lengths is None
+          else jnp.asarray(lengths, jnp.int32))
+    if cfg.family not in ("dense", "moe", "vlm"):
+        return _prefill_chunk_scan(
+            params, cache, tokens, pos_b, cfg, nv, write_mask,
+            lambda p, c, t, pos, wm: decode_step(p, c, t, pos, cfg,
+                                                 write_mask=wm))
     x = embed_lookup(params["embed"], tokens).astype(cfg.cdtype)
-    pos_b = (jnp.asarray(pos, jnp.int32).reshape(B) if jnp.ndim(pos) >= 1
-             else jnp.full((B,), pos, jnp.int32))
     positions = pos_b[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
-    nv = (jnp.full((B,), S, jnp.int32) if n_valid is None
-          else jnp.asarray(n_valid, jnp.int32))
     bt = cache.get("block_tables")
     if bt is not None:  # paged: virtual KV length = blocks * page size
         max_len = bt.shape[1] * cache["blocks"]["k"].shape[3]
@@ -455,6 +463,29 @@ def verify_step(params, cache, tokens, pos, cfg, n_valid=None,
              else {"blocks": new_cache, "block_tables": bt})
     x = norm_fn(params["final_norm"], x)
     return logits_fn(params, x, cfg), cache
+
+
+def _prefill_chunk_scan(params, cache, tokens, pos_b, cfg, nv, write_mask,
+                        step_fn):
+    """``prefill_chunk`` for recurrent-state families (and encdec): one
+    gated ``decode_step`` per chunk lane.  Lane ``i`` feeds ``tokens[:, i]``
+    at position ``pos_b + i`` with writes gated by
+    ``write_mask & (i < nv)`` — exactly the per-lane mask the one-pass
+    attention chunk applies, so the contract (and the stacked (B, S, V)
+    logits) is identical, just O(S) sequential."""
+    B, S = tokens.shape
+    base = (jnp.ones((B,), bool) if write_mask is None
+            else jnp.asarray(write_mask, bool))
+
+    def body(cache_c, xs_):
+        t, i = xs_
+        wm = base & (i < nv)
+        logits, cache_c = step_fn(params, cache_c, t[:, None], pos_b + i, wm)
+        return cache_c, logits[:, -1, :]
+
+    cache, logits = jax.lax.scan(
+        body, cache, (tokens.T, jnp.arange(S, dtype=jnp.int32)))
+    return logits.transpose(1, 0, 2), cache
 
 
 def prefill(params, cache, tokens, cfg, lengths=None):

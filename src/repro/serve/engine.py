@@ -147,48 +147,38 @@ def build_decode_loop(model, scfg: ServeConfig, steps: int):
     return _LOOP_CACHE[ck]
 
 
-_TEACHER_CACHE: dict = {}
+_CHUNK_CACHE: dict = {}
 
 
-def build_teacher_loop(model, scfg: ServeConfig, steps: int):
-    """Jit'd teacher-forced suffix fill over a (slot-pool) cache.
+def build_prefill_chunk(model, scfg: ServeConfig, width: int):
+    """Jit'd chunked attend-at-offset prefill over a (slot-pool) cache.
 
-    (params, cache, toks (B, steps), start (B,), n_valid (B,), gate (B,)) ->
-    (last_logits (B, V), cache).  Step ``i`` feeds ``toks[:, i]`` at
-    position ``start + i`` with the cache write gated by
-    ``gate & (i < n_valid)``; each gated row's logits at its step
-    ``n_valid - 1`` are captured — the next-token logits after its true
-    suffix.  This is the prefix-cache admission path: tokens whose KV pages
-    already exist are skipped entirely, and only the un-cached suffix is
-    pushed through decode steps (the step count is the prefill work
-    actually done).  Rows with ``gate`` False compute but never write —
-    the rest of the pool is untouched.
+    (params, cache, toks (B, width), start (B,), n_valid (B,), gate (B,)) ->
+    (last_logits (B, V), cache).  One ``model.prefill_chunk`` call writes
+    row ``b``'s first ``n_valid[b]`` tokens at positions ``start[b] ..`` and
+    attends each against the full cached history under its own causal
+    frontier; the returned logits are each gated row's lane ``n_valid - 1``
+    — the next-token logits after its chunk.  Rows with ``gate`` False
+    compute but never write, so the rest of the pool is untouched — a long
+    prompt admits as a *sequence* of these calls (start advancing by the
+    chunk width) interleaved with decode bursts, and prefix-cache hits skip
+    straight to their un-cached suffix.  This one executable replaced the
+    dense group prefill, the paged cold prefill + page copy, the
+    teacher-forced suffix loop, and the spec drafter's sync path.
     """
-    ck = (model.cfg, scfg, steps)
-    if ck in _TEACHER_CACHE:
-        return _TEACHER_CACHE[ck]
-    vocab = model.cfg.vocab
+    ck = (model.cfg, scfg, width)
+    if ck in _CHUNK_CACHE:
+        return _CHUNK_CACHE[ck]
 
     @functools.partial(jax.jit, donate_argnums=(1,))
-    def teacher(params, cache, toks, start, n_valid, gate):
-        B = toks.shape[0]
+    def chunk(params, cache, toks, start, n_valid, gate):
+        logits, cache = model.prefill_chunk(params, cache, toks, start,
+                                            lengths=n_valid, write_mask=gate)
+        pick = jnp.maximum(n_valid - 1, 0).astype(I32)[:, None, None]
+        last = jnp.take_along_axis(logits, pick, axis=1)[:, 0]
+        return last.astype(jnp.float32), cache
 
-        def body(carry, i):
-            cache_c, out = carry
-            wm = gate & (i < n_valid)
-            logits, cache_c = model.decode_step(params, cache_c,
-                                                toks[:, i][:, None],
-                                                start + i, write_mask=wm)
-            last = logits[:, -1, :]
-            take = (wm & (i == n_valid - 1))[:, None]
-            return (cache_c, jnp.where(take, last, out)), None
-
-        (cache, out), _ = jax.lax.scan(
-            body, (cache, jnp.zeros((B, vocab), jnp.float32)),
-            jnp.arange(steps, dtype=I32))
-        return out, cache
-
-    return _cache_put(_TEACHER_CACHE, ck, teacher)
+    return _cache_put(_CHUNK_CACHE, ck, chunk)
 
 
 def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
@@ -199,8 +189,24 @@ def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
     model = resolve_attn_mode(model, scfg.attn_mode)
     B = batch["tokens"].shape[0]
     cache = model.init_cache(params, B, scfg.max_len, scfg.cache_dtype)
-    logits, cache, pos = build_prefill(model)(params, cache, batch)
-    last = logits[:, -1, :] if logits.ndim == 3 else logits
+    if model.init_paged_cache is not None:
+        # attention families prefill through the SAME chunked
+        # attend-at-offset primitive the slot-pool scheduler admits with —
+        # write-then-attend against the cache, so solo outputs match pooled
+        # serving by construction for every cache dtype (fp2fx8 included:
+        # the prompt reads quantized KV exactly like decode does)
+        toks = jnp.asarray(batch["tokens"], I32)
+        S = toks.shape[1]
+        lens = batch.get("lengths")
+        nv = (jnp.asarray(lens, I32) if lens is not None
+              else jnp.full((B,), S, I32))
+        last, cache = build_prefill_chunk(model, scfg, S)(
+            params, cache, toks, jnp.zeros((B,), I32), nv,
+            jnp.ones((B,), bool))
+        pos = S
+    else:
+        logits, cache, pos = build_prefill(model)(params, cache, batch)
+        last = logits[:, -1, :] if logits.ndim == 3 else logits
     # the FIRST generated token comes from the prefill logits — it must be
     # sampled too when temperature > 0 (it used to be unconditionally argmax,
     # which made every decode start greedy)

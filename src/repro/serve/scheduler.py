@@ -9,14 +9,20 @@ serves that shape of load with three pieces:
   slot pool    — the KV cache is allocated ONCE with a fixed batch (slot)
                  dimension ``n_slots`` (dense or fp2fx8 layout); per-slot
                  host state tracks ``length`` (next write position),
-                 ``active``, and the remaining token ``budget``.  A request
-                 occupies a slot for exactly its own lifetime.
-  ragged prefill — queued prompts are right-padded to a bucketed length and
-                 prefilled as one batch (``prefill(..., lengths=...)``); the
-                 per-row ``kv_len_mask`` contract makes padding invisible,
-                 and each row's first token comes from the logits at its own
-                 ``length - 1``.  The prefilled rows are scattered into free
-                 slots while the rest of the pool keeps its cache.
+                 ``active``, ``prefilling``, and the remaining token
+                 ``budget``.  A request occupies a slot for exactly its own
+                 lifetime.
+  chunked prefill — admission is host bookkeeping only; the prompt tokens
+                 are pushed through ``engine.build_prefill_chunk`` (the
+                 chunked attend-at-offset primitive, DESIGN.md §12) IN
+                 PLACE over the slot's own cache rows: every prefilling row
+                 writes up to ``ServeConfig.prefill_chunk`` tokens at its
+                 own offset per call, multiple short prompts pack into one
+                 bucketed call (``pack_prefill``), and long prompts span
+                 several calls interleaved with decode bursts — so decode
+                 never stalls longer than one chunk, and prompts longer
+                 than any single bucket still serve.  Each completed row's
+                 first token comes from its lane ``length - 1`` logits.
   masked burst — decode advances ALL slots in one jitted ``lax.scan`` of
                  ``decode_burst`` steps: each step writes KV at per-slot
                  positions (``cache_update_ragged``), attends under the
@@ -51,12 +57,13 @@ serves that shape of load with three pieces:
   paged — a global pool of fixed-size pages (``repro.serve.kvpool``) with
           per-slot block tables: admission allocates just the prompt's
           pages, decode bursts append pages on demand, exhaustion preempts
-          the lowest-priority slot (requeued through normal admission with
-          its generated tokens folded into the prompt — greedy
-          continuation is identical), and ``prefix_cache`` shares the
-          pages of previously seen prompt prefixes through a radix trie,
-          so cached tokens skip prefill entirely (only the un-cached
-          suffix is pushed through teacher-forced decode steps).
+          the LATEST-ARRIVAL slot — arrival order is the priority, ties by
+          rid — (requeued through normal admission with its generated
+          tokens folded into the prompt — greedy continuation is
+          identical), and ``prefix_cache`` shares the pages of previously
+          seen prompt prefixes through a radix trie, so cached tokens skip
+          prefill entirely (only the un-cached suffix goes through
+          ``prefill_chunk`` calls).
 
 Greedy (temperature == 0) outputs are token-for-token identical to a solo
 ``engine.generate`` run of the same prompt — padding, slot position, and
@@ -108,10 +115,20 @@ class Completion:
     prompt_len: int
     finished_at: float                # seconds after run() start
     arrival: float = 0.0
+    # per-token emission timestamps (seconds after run() start, stamped at
+    # burst/prefill completion — tokens emitted by one burst share one
+    # stamp).  token_times[0] - arrival is the TTFT; successive diffs are
+    # the inter-token (TBT) gaps the chunked-prefill scheduling bounds.
+    token_times: list = dataclasses.field(default_factory=list)
 
     @property
     def latency(self) -> float:
         return self.finished_at - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        return (self.token_times[0] if self.token_times
+                else self.finished_at) - self.arrival
 
 
 def _bucket(n: int, lo: int = 4) -> int:
@@ -131,9 +148,13 @@ _AXES_CACHE: dict = {}
 def _burst_key_cfg(scfg: ServeConfig) -> ServeConfig:
     """Burst compilations depend on the decode arithmetic, not the admission
     policy: lockstep mode ignores EOS, so normalize both fields and let the
-    schedulers share one compiled burst (spec honors EOS like continuous)."""
+    schedulers share one compiled burst (spec honors EOS like continuous).
+    The chunk-scheduling knobs are admission policy too — a prefill-chunk
+    executable is keyed by its width alone, so chunked and whole-prompt
+    runs share compilations."""
     eos = scfg.eos_id if scfg.scheduler in ("continuous", "spec") else None
-    return dataclasses.replace(scfg, scheduler="", eos_id=eos)
+    return dataclasses.replace(scfg, scheduler="", eos_id=eos,
+                               prefill_chunk=0, pack_prefill=True)
 
 
 def build_burst(model, scfg: ServeConfig, steps: int):
@@ -229,42 +250,19 @@ def build_scatter(model, axes, max_len, dtype):
     return engine._cache_put(_SCATTER_CACHE, ck, scatter)
 
 
-_PAGECOPY_CACHE: dict = {}
+_ENCODE_CACHE: dict = {}
 
 
-def build_page_copy(model, scfg: ServeConfig, g: int, s_pad: int):
-    """Jit'd (pool_blocks, dense_blocks, rows, blks, pages) -> pool_blocks.
-
-    Copies dense prefilled KV into physical pages: entry ``m`` moves dense
-    row ``rows[m]``'s KV block ``blks[m]`` (``page_size`` positions) into
-    page ``pages[m]`` of the pool; padding entries target the null page 0
-    (``repro.serve.kvpool.NULL_PAGE``), so the index vectors have ONE
-    compiled shape per (group, prompt) bucket.  The pool is donated —
-    admission fills pages in place.
-    """
-    ps = scfg.page_size
-    ck = (model.cfg, scfg.cache_dtype, ps, g, s_pad)
-    if ck in _PAGECOPY_CACHE:
-        return _PAGECOPY_CACHE[ck]
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def copy(pool, dense, rows, blks, pages):
-        def leaf(pool_l, dn):
-            # pool_l (L, P, H, ps[, D]); dn (L, g, H, S[, D]) — pad S to a
-            # page multiple, then block the position axis into pages
-            pad = (-dn.shape[3]) % ps
-            if pad:
-                w = [(0, 0)] * dn.ndim
-                w[3] = (0, pad)
-                dn = jnp.pad(dn, w)
-            nb = dn.shape[3] // ps
-            dn = dn.reshape(dn.shape[:3] + (nb, ps) + dn.shape[4:])
-            src = dn[:, rows, :, blks]            # (M, L, H, ps[, D])
-            return pool_l.at[:, pages].set(
-                jnp.moveaxis(src, 0, 1).astype(pool_l.dtype))
-        return jax.tree.map(leaf, pool, dense)
-
-    return engine._cache_put(_PAGECOPY_CACHE, ck, copy)
+def build_encode(model):
+    """Jit'd (params, frames) -> encoder memory — chunked encdec admission
+    runs the encoder once per admitted group and installs the memory rows
+    into the slot cache before any ``prefill_chunk`` call (one compile per
+    bucketed group shape)."""
+    ck = model.cfg
+    if ck in _ENCODE_CACHE:
+        return _ENCODE_CACHE[ck]
+    return engine._cache_put(
+        _ENCODE_CACHE, ck, jax.jit(lambda p, fr: model.encode(p, fr)))
 
 
 class SlotPoolEngine:
@@ -295,7 +293,7 @@ class SlotPoolEngine:
                     "scheduler='spec' is greedy-only (temperature == 0): "
                     "sampled speculative acceptance needs distribution-"
                     "level rejection sampling, not the top-k/top-p filters")
-            if self.model.verify_step is None:
+            if self.model.init_paged_cache is None:
                 raise ValueError(
                     "scheduler='spec' needs an attention-family model "
                     "(dense/moe/vlm): SSM/hybrid/encdec state has no O(1) "
@@ -334,16 +332,31 @@ class SlotPoolEngine:
                 raise ValueError("prefix_cache requires kv_layout='paged'")
             self.cache = self.model.init_cache(params, n, scfg.max_len,
                                                scfg.cache_dtype)
+        if scfg.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = whole prompt)")
         self.lengths = np.zeros(n, np.int32)
         self.active = np.zeros(n, bool)
+        self.prefilling = np.zeros(n, bool)   # admitted, prompt not yet fed
         self.budget = np.zeros(n, np.int32)
         self.last_tok = np.zeros(n, np.int32)
         self.slot_rid: list[Optional[int]] = [None] * n
+        # the prompt a slot was admitted with (a preempted resume carries
+        # its generated tokens folded in) — chunk admission slices pending
+        # tokens out of it, and trie publication reads it at completion
+        self.slot_prompt: list[Optional[np.ndarray]] = [None] * n
         self.outputs: dict[int, list] = {}
+        self.out_times: dict[int, list] = {}  # per-token emission stamps
         self.requests: dict[int, Request] = {}
         self.completions: dict[int, Completion] = {}
         self._queue: deque = deque()
-        if not self.paged:  # admission scatters dense rows into slots
+        # chunk prefill writes attention rows in place (the kv_index <=
+        # position mask hides a previous occupant's stale KV), but
+        # recurrent-state families CONTINUE from the slot's stored state,
+        # so their admission scatters fresh zero rows first
+        self._needs_reset = self.model.init_paged_cache is None
+        self._encode = (build_encode(self.model)
+                        if self.model.encode is not None else None)
+        if not self.paged and self._needs_reset:
             self._axes = _cache_batch_axes(self.model, params, scfg.max_len,
                                            scfg.cache_dtype)
             self._scatter = build_scatter(self.model, self._axes,
@@ -369,61 +382,48 @@ class SlotPoolEngine:
     # -- warmup --------------------------------------------------------
 
     def prewarm(self, max_prompt_len: int, frontend=None) -> None:
-        """Compile every executable a run can hit — the burst, the scatter,
-        and the ragged prefill at every (group, prompt) bucket shape.
+        """Compile every executable a run can hit — the burst and the
+        prefill-chunk call at every width admission can bucket to (plus the
+        encoder + zero-row scatter for recurrent-state families).
 
         Admission shapes depend on arrival timing (how many requests are
         queued when slots free up), so without this a *timed* run may pay a
-        jit trace mid-flight.  ``frontend``: (frontend_len, frontend_dim)
-        for encdec models.
+        jit trace mid-flight.  Chunk calls always run all ``n_slots`` rows
+        and are keyed by width alone, so the warm grid is one-dimensional —
+        far fewer compilations than the old (group, prompt) bucket grid.
+        ``frontend``: (frontend_len, frontend_dim) for encdec models.
         """
         scfg = self.scfg
-        gs, g = [], 1
-        while g < scfg.n_slots:
-            gs.append(g)
-            g *= 2
-        gs.append(_bucket(scfg.n_slots, lo=1))
-        sps, sp = [], 4
-        while sp < min(_bucket(max_prompt_len), scfg.max_len):
-            sps.append(sp)
-            sp *= 2
-        sps.append(min(_bucket(max_prompt_len), scfg.max_len))
-        prefill = engine.build_prefill(self.model)
-        for g in sorted(set(gs)):
-            for sp in sorted(set(sps)):
-                batch = {"tokens": jnp.zeros((g, sp), I32),
-                         "lengths": jnp.ones((g,), I32)}
-                if frontend is not None:
-                    batch["frames"] = jnp.zeros((g,) + tuple(frontend))
-                fresh = self.model.init_cache(self.params, g, scfg.max_len,
-                                              scfg.cache_dtype)
-                _, warm_cache, _ = prefill(self.params, fresh, batch)
-                jax.block_until_ready(jax.tree.leaves(warm_cache)[0])
-                if self.paged:  # the dense-row -> page copy per bucket pair
-                    m = g * (-(-sp // scfg.page_size))
-                    z = jnp.zeros(m, I32)
-                    self.cache["blocks"] = build_page_copy(
-                        self.model, scfg, g, sp)(
-                            self.cache["blocks"], warm_cache["blocks"],
-                            z, z, z)
         n = scfg.n_slots
-        if self.paged:
-            if self.trie is not None:  # teacher suffix buckets (prefix hits)
-                m, m_top = 1, _bucket(max_prompt_len, lo=1)
-                while m <= m_top:
-                    tl = engine.build_teacher_loop(
-                        self.model, _burst_key_cfg(scfg), m)
-                    out, self.cache = tl(
-                        self.params, self.cache, jnp.zeros((n, m), I32),
-                        jnp.zeros(n, I32), jnp.ones(n, I32),
-                        jnp.zeros(n, bool))
-                    jax.block_until_ready(out)
-                    m *= 2
-        else:
+        cap = min(_bucket(max_prompt_len), scfg.max_len)
+        c0 = scfg.prefill_chunk
+        widths, b = set(), 4
+        while b < cap:
+            widths.add(min(c0, b) if c0 > 0 else b)
+            b *= 2
+        widths.add(min(c0, cap) if c0 > 0 else cap)
+        if frontend is not None and self._encode is not None:
+            g, g_top = 1, _bucket(n, lo=1)
+            while True:
+                jax.block_until_ready(self._encode(
+                    self.params, jnp.zeros((g,) + tuple(frontend))))
+                if g >= g_top:
+                    break
+                g *= 2
+        if not self.paged and self._needs_reset:
             fresh = self.model.init_cache(self.params, n, scfg.max_len,
                                           scfg.cache_dtype)
             self.cache = self._scatter(self.cache, fresh,
                                        jnp.arange(n, dtype=I32))
+        for w in sorted(widths):
+            pc = engine.build_prefill_chunk(self.model, _burst_key_cfg(scfg),
+                                            w)
+            # gate all-False: every row computes but none writes, so the
+            # live pool is untouched — no scratch/restore dance needed
+            out, self.cache = pc(self.params, self.cache,
+                                 jnp.zeros((n, w), I32), jnp.zeros(n, I32),
+                                 jnp.ones(n, I32), jnp.zeros(n, bool))
+            jax.block_until_ready(out)
         if self.spec:
             K = self.scfg.draft_k
             out = self._spec_step(self.params, self.cache,
@@ -442,118 +442,91 @@ class SlotPoolEngine:
 
     # -- admission -----------------------------------------------------
 
-    def _first_token(self, logits):
+    def _first_token(self, last):
         """Sample (temperature > 0) or argmax the FIRST generated token from
-        the ragged prefill logits — same contract as ``engine.generate``."""
-        last = logits[:, -1, :]
+        the (B, V) next-token logits a completed prefill returned — same
+        contract as ``engine.generate``."""
         if self.scfg.temperature > 0:
             self.key, sub = jax.random.split(self.key)
             return engine._sample(last, sub, self.scfg.temperature,
                                   self.scfg.top_k, self.scfg.top_p)
         return jnp.argmax(last, -1)
 
-    def _group_prefill(self, reqs: list[Request]):
-        """Bucketed ragged group prefill on a fresh dense scratch cache.
-
-        Prompts are right-padded to a bucketed common length (and the group
-        to a bucketed row count, bounding compilations); row ``b``'s true
-        length rides in ``batch["lengths"]`` per the kv_len_mask contract.
-        Returns (logits, scratch cache, lens).
-        """
-        scfg = self.scfg
-        lens = np.array([len(r.tokens) for r in reqs], np.int32)
-        g = _bucket(len(reqs), lo=1)
-        s_pad = min(_bucket(int(lens.max())), scfg.max_len)
-        toks = np.zeros((g, s_pad), np.int32)
-        glens = np.ones(g, np.int32)
-        for b, r in enumerate(reqs):
-            toks[b, :lens[b]] = np.asarray(r.tokens, np.int32)
-        toks[len(reqs):] = toks[0]          # dummy rows: never scattered
-        glens[:len(reqs)] = lens
-        glens[len(reqs):] = lens[0]
-        batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(glens)}
-        if reqs[0].frames is not None:
-            if any(r.frames is None for r in reqs):
-                raise ValueError("mixed group: some requests carry encoder "
-                                 "frames and some do not")
-            fr = np.stack([np.asarray(r.frames) for r in reqs])
-            fr = np.concatenate([fr, np.repeat(fr[:1], g - len(reqs), 0)], 0)
-            batch["frames"] = jnp.asarray(fr)
-
-        fresh = self.model.init_cache(self.params, g, scfg.max_len,
-                                      scfg.cache_dtype)
-        logits, new_cache, _ = engine.build_prefill(self.model)(
-            self.params, fresh, batch)
-        self.stats["prefills"] += 1
-        return logits, new_cache, lens
-
-    def _record_first(self, r: Request, tok0: int, now: float) -> bool:
-        """First-generated-token bookkeeping (admission or resume).  Returns
-        True when the request is already complete (EOS / budget) and must
-        not occupy a slot."""
+    def _start_prefill(self, s: int, r: Request, start: int) -> None:
+        """Host bookkeeping that puts ``r`` into slot ``s`` in the
+        ``prefilling`` state with ``start`` tokens already cached (prefix
+        hits); ``_prefill_step`` feeds the rest chunk by chunk."""
         if not r.resume:
             self.requests[r.rid] = r
             self.outputs[r.rid] = []
+            self.out_times[r.rid] = []
             self.stats["admitted"] += 1
-        self.outputs[r.rid].append(tok0)
-        self.stats["tokens_emitted"] += 1
-        done = (r.max_new <= 1
-                or (self._eos is not None and tok0 == self._eos))
-        if done:
-            self._finish(r.rid, now)
-        return done
+        self.slot_rid[s] = r.rid
+        self.slot_prompt[s] = np.asarray(r.tokens, np.int32)
+        self.lengths[s] = start
+        self.active[s] = False
+        self.prefilling[s] = True
+        self.budget[s] = r.max_new
+        self._drafter_reset(s)
+        self.stats["prompt_tokens"] += len(r.tokens)
+        self.stats["prefill_tokens"] += len(r.tokens) - start
 
     def admit(self, reqs: list[Request], now: float) -> None:
-        """Admit ``reqs`` into free slots: ragged group prefill + insertion
-        (dense layout), or page allocation + prefix-cache reuse (paged).
-        Rows whose request is already complete after its first token (EOS
-        or ``max_new == 1``) never occupy a slot.
-        """
+        """Admit ``reqs`` into free slots — host bookkeeping only: per-slot
+        prompt/offset state, page allocation + prefix-cache matching
+        (paged), and a fresh zero row + encoder memory for recurrent-state
+        families.  The prompts are then fed through chunked
+        ``_prefill_step`` calls interleaved with decode bursts; a row whose
+        request completes on its first token (EOS or ``max_new == 1``)
+        frees its slot at that point."""
         if not reqs:
             return
-        free = [s for s in range(self.scfg.n_slots) if not self.active[s]
-                and self.slot_rid[s] is None]
+        free = [s for s in range(self.scfg.n_slots)
+                if self.slot_rid[s] is None]
         assert len(reqs) <= len(free), "admitting more requests than slots"
         if self.paged:
-            self._admit_paged(reqs, free, now)
+            self._admit_paged(reqs, free)
         else:
-            self._admit_dense(reqs, free, now)
-        self.stats["peak_active"] = max(self.stats["peak_active"],
-                                        int(self.active.sum()))
+            self._admit_dense(reqs, free)
 
-    def _admit_dense(self, reqs, free, now):
+    def _admit_dense(self, reqs, free):
         scfg = self.scfg
-        logits, new_cache, lens = self._group_prefill(reqs)
-        tok0 = np.asarray(self._first_token(logits), np.int32)
-        self.stats["prompt_tokens"] += int(lens.sum())
-        self.stats["prefill_tokens"] += int(lens.sum())
-
-        slot_idx, takers = [], []
-        for b, r in enumerate(reqs):
-            if self._record_first(r, int(tok0[b]), now):
-                continue
-            s = free[len(takers)]
-            takers.append(b)
-            slot_idx.append(s)
-            self.slot_rid[s] = r.rid
-            self.lengths[s] = lens[b]
-            self.budget[s] = r.max_new - 1
-            self.last_tok[s] = tok0[b]
-            self.active[s] = True
-            self._drafter_reset(s)
-        if slot_idx:
-            # reorder the prefilled rows so row j lands in slot_idx[j];
-            # pad both index vectors to n_slots (repeating the last pair —
-            # duplicate writes of identical rows) so the jitted scatter
-            # compiles exactly once per pool
-            pad = scfg.n_slots - len(slot_idx)
-            order = np.array(takers + [takers[-1]] * pad, np.int32)
-            slots = np.array(slot_idx + [slot_idx[-1]] * pad, np.int32)
+        n = scfg.n_slots
+        if self._needs_reset:
+            # SSM/hybrid/encdec chunk-prefill through gated decode steps,
+            # which CONTINUE from the slot's stored recurrent state — wipe
+            # the admitted rows (and install encoder memory) before the
+            # first chunk.  Attention rows skip this: the kv_index <=
+            # position mask already hides a previous occupant's stale KV.
+            fresh = self.model.init_cache(self.params, n, scfg.max_len,
+                                          scfg.cache_dtype)
+            if reqs[0].frames is not None:
+                if any(r.frames is None for r in reqs):
+                    raise ValueError("mixed group: some requests carry "
+                                     "encoder frames and some do not")
+                g = _bucket(len(reqs), lo=1)
+                fr = np.stack([np.asarray(r.frames) for r in reqs])
+                fr = np.concatenate(
+                    [fr, np.repeat(fr[:1], g - len(reqs), 0)], 0)
+                mem = np.asarray(self._encode(self.params, jnp.asarray(fr)))
+                memp = np.array(fresh["memory"])
+                memp[:len(reqs)] = mem[:len(reqs)].astype(memp.dtype)
+                fresh = dict(fresh, memory=jnp.asarray(memp))
+            # row j -> slot free[j]; pad both index vectors to n_slots by
+            # repeating the LAST pair (duplicate writes of identical rows
+            # are benign) so the jitted scatter compiles exactly once
+            order = np.arange(n, dtype=np.int32)
+            order[len(reqs):] = len(reqs) - 1
+            slots = np.array(free[:len(reqs)]
+                             + [free[len(reqs) - 1]] * (n - len(reqs)),
+                             np.int32)
             picked = jax.tree.map(
                 lambda leaf, ax: jnp.take(leaf, jnp.asarray(order), axis=ax),
-                new_cache, self._axes)
+                fresh, self._axes)
             self.cache = self._scatter(self.cache, picked,
                                        jnp.asarray(slots))
+        for j, r in enumerate(reqs):
+            self._start_prefill(free[j], r, 0)
 
     # -- paged admission (page allocation + prefix cache) --------------
 
@@ -576,32 +549,21 @@ class SlotPoolEngine:
         if self.drafter is not None:
             self.drafter.reset_slot(s)
 
-    def _occupy(self, s: int, r: Request, pages: list, length: int,
-                tok0: int) -> None:
-        self.slot_rid[s] = r.rid
-        self._drafter_reset(s)
-        self.slot_pages[s] = list(pages)
-        self.block_tables[s, :] = 0
-        self.block_tables[s, :len(pages)] = pages
-        self.lengths[s] = length
-        self.budget[s] = r.max_new - 1
-        self.last_tok[s] = tok0
-        self.active[s] = True
-
     def _release_slot_pages(self, s: int) -> None:
         for p in self.slot_pages[s]:
             self.pool.decref(p)
         self.slot_pages[s] = []
         self.block_tables[s, :] = 0
 
-    def _admit_paged(self, reqs, free, now):
+    def _admit_paged(self, reqs, free):
         """Paged admission: allocate each prompt's pages (reusing cached
-        prefix pages when the radix trie matches), prefill the cold rows as
-        one dense group and copy them into pages, and push only the
-        un-cached suffix of hit rows through teacher-forced decode steps —
-        the cached tokens never touch the model.
+        prefix pages when the radix trie matches) and install the block
+        table — no model call here.  Cold rows start their chunked prefill
+        at offset 0, hit rows at the matched length: the cached tokens
+        never touch the model, and the un-cached suffix flows through the
+        same ``prefill_chunk`` calls as everything else.
         """
-        scfg, ps = self.scfg, self.scfg.page_size
+        ps = self.scfg.page_size
         plans, leftover = [], []
         for i, r in enumerate(reqs):
             toks = np.asarray(r.tokens, np.int32)
@@ -632,106 +594,115 @@ class SlotPoolEngine:
             plans.append((r, matched, list(matched_pages) + new))
         if leftover:
             self._queue.extendleft(reversed(leftover))
-        if not plans:
-            return
-        for r, matched, _ in plans:
-            self.stats["prompt_tokens"] += len(r.tokens)
+        for j, (r, matched, pages) in enumerate(plans):
+            s = free[j]
+            self._start_prefill(s, r, matched)
+            # prefill_chunk writes through the block table: install it (and
+            # the page ownership) before the first chunk runs
+            self.slot_pages[s] = list(pages)
+            self.block_tables[s, :] = 0
+            self.block_tables[s, :len(pages)] = pages
             self.stats["cached_tokens"] += matched
-            self.stats["prefill_tokens"] += len(r.tokens) - matched
             if matched:
                 self.stats["prefix_hits"] += 1
-
-        cold = [(r, pages) for r, matched, pages in plans if matched == 0]
-        hits = [(r, matched, pages) for r, matched, pages in plans
-                if matched > 0]
-        done_pages: list = []
-
-        if cold:
-            creqs = [r for r, _ in cold]
-            logits, scratch, lens = self._group_prefill(creqs)
-            tok0 = np.asarray(self._first_token(logits), np.int32)
-            # copy each prefilled row's KV blocks into its allocated pages
-            g = _bucket(len(creqs), lo=1)
-            s_pad = min(_bucket(int(lens.max())), scfg.max_len)
-            m_cap = g * (-(-s_pad // ps))
-            rows = np.zeros(m_cap, np.int32)
-            blks = np.zeros(m_cap, np.int32)
-            pgs = np.zeros(m_cap, np.int32)    # default: null page 0
-            m = 0
-            for b, (r, pages) in enumerate(cold):
-                for j in range(-(-int(lens[b]) // ps)):
-                    rows[m], blks[m], pgs[m] = b, j, pages[j]
-                    m += 1
-            self.cache["blocks"] = build_page_copy(
-                self.model, scfg, g, s_pad)(
-                    self.cache["blocks"], scratch["blocks"],
-                    jnp.asarray(rows), jnp.asarray(blks), jnp.asarray(pgs))
-            for b, (r, pages) in enumerate(cold):
-                if self._record_first(r, int(tok0[b]), now):
-                    done_pages.extend(pages)
-                    continue
-                self._occupy(free.pop(0), r, pages, int(lens[b]),
-                             int(tok0[b]))
-
-        if hits:
-            n = scfg.n_slots
-            m_pad = _bucket(max(len(r.tokens) - matched
-                                for r, matched, _ in hits), lo=1)
-            toks_arr = np.zeros((n, m_pad), np.int32)
-            start = np.array(self.lengths, np.int32)
-            n_valid = np.ones(n, np.int32)
-            gate = np.zeros(n, bool)
-            hslots = []
-            for r, matched, pages in hits:
-                s = free.pop(0)
-                hslots.append((r, matched, pages, s))
-                suf = np.asarray(r.tokens, np.int32)[matched:]
-                toks_arr[s, :len(suf)] = suf
-                start[s] = matched
-                n_valid[s] = len(suf)
-                gate[s] = True
-                # the teacher writes through the block table: install it
-                # (and the page ownership) before the scan runs
-                self.slot_pages[s] = list(pages)
-                self.block_tables[s, :] = 0
-                self.block_tables[s, :len(pages)] = pages
-            self.cache["block_tables"] = jnp.asarray(self.block_tables)
-            teacher = engine.build_teacher_loop(
-                self.model, _burst_key_cfg(scfg), m_pad)
-            out_logits, self.cache = teacher(
-                self.params, self.cache, jnp.asarray(toks_arr),
-                jnp.asarray(start), jnp.asarray(n_valid), jnp.asarray(gate))
-            last = np.asarray(
-                self._first_token(out_logits[:, None, :]), np.int32)
-            for r, matched, pages, s in hslots:
-                if self._record_first(r, int(last[s]), now):
-                    done_pages.extend(pages)
-                    self.slot_pages[s] = []
-                    self.block_tables[s, :] = 0
-                    continue
-                self._occupy(s, r, pages, len(r.tokens), int(last[s]))
-
-        if self.trie is not None:
-            # publish every admitted prompt's FULL pages (partial tail
-            # pages are never shared — decode writes into them); insert
-            # before the done-row release so adopted pages survive it
-            for r, _, pages in plans:
-                nfull = len(r.tokens) // ps
-                if nfull:
-                    self.trie.insert(
-                        [int(t) for t in np.asarray(r.tokens)[:nfull * ps]],
-                        pages[:nfull])
-        for p in done_pages:
-            self.pool.decref(p)
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                        self.pool.pages_in_use)
 
+    # -- chunked prefill ------------------------------------------------
+
+    def _prefill_step(self, now: float) -> None:
+        """Feed every prefilling slot its next chunk through ONE
+        ``engine.build_prefill_chunk`` call (packed; ``pack_prefill=False``
+        feeds only the earliest-arrival slot — an ablation knob).  The call
+        width is ``prefill_chunk`` (0 = whole remaining prompt) capped to
+        the bucketed longest remainder; rows that finish inside this chunk
+        take their first generated token from the returned last-lane logits
+        and flip to ``active`` (or free immediately on EOS / budget 1)."""
+        scfg = self.scfg
+        n = scfg.n_slots
+        rows = [s for s in range(n) if self.prefilling[s]]
+        if not rows:
+            return
+        if not scfg.pack_prefill:
+            rows = [min(rows, key=lambda s: (
+                self.requests[self.slot_rid[s]].arrival, self.slot_rid[s]))]
+        rem = {s: len(self.slot_prompt[s]) - int(self.lengths[s])
+               for s in rows}
+        cap = min(_bucket(max(rem.values())), scfg.max_len)
+        width = min(scfg.prefill_chunk, cap) if scfg.prefill_chunk > 0 \
+            else cap
+        toks = np.zeros((n, width), np.int32)
+        n_valid = np.ones(n, np.int32)
+        gate = np.zeros(n, bool)
+        for s in rows:
+            part = self.slot_prompt[s][int(self.lengths[s]):
+                                       int(self.lengths[s]) + width]
+            toks[s, :len(part)] = part
+            n_valid[s] = len(part)
+            gate[s] = True
+        if self.paged:
+            self.cache["block_tables"] = jnp.asarray(self.block_tables)
+        pc = engine.build_prefill_chunk(self.model, _burst_key_cfg(scfg),
+                                        width)
+        # jnp.asarray copies the host mirror, so mutating self.lengths
+        # below cannot race the dispatched call
+        last, self.cache = pc(self.params, self.cache, jnp.asarray(toks),
+                              jnp.asarray(self.lengths),
+                              jnp.asarray(n_valid), jnp.asarray(gate))
+        self.stats["prefills"] += 1
+        fin = [s for s in rows if rem[s] <= width]
+        for s in rows:
+            self.lengths[s] += min(rem[s], width)
+        if fin:
+            tok0 = np.asarray(self._first_token(last), np.int32)
+            for s in fin:
+                self._finish_prefill(s, int(tok0[s]), now)
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        int(self.active.sum()))
+
+    def _finish_prefill(self, s: int, tok0: int, now: float) -> None:
+        """Slot ``s``'s whole prompt is cached and its first generated
+        token is in hand: publish the prompt's full pages to the prefix
+        cache, emit the token, and either activate the slot for decode or
+        free it (EOS / budget exhausted on the very first token)."""
+        self.prefilling[s] = False
+        rid = self.slot_rid[s]
+        if self.trie is not None:
+            # publish the admitted prompt's FULL pages (partial tail pages
+            # are never shared — decode writes into them); insert before
+            # any done-row release so adopted pages survive it
+            ptoks = self.slot_prompt[s]
+            nfull = len(ptoks) // self.scfg.page_size
+            if nfull:
+                self.trie.insert(
+                    [int(t) for t in ptoks[:nfull * self.scfg.page_size]],
+                    self.slot_pages[s][:nfull])
+            self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                           self.pool.pages_in_use)
+        self.outputs[rid].append(tok0)
+        self.out_times[rid].append(now)
+        self.stats["tokens_emitted"] += 1
+        done = (self.budget[s] <= 1
+                or (self._eos is not None and tok0 == self._eos))
+        if done:
+            self._finish(rid, now)
+            self.slot_rid[s] = None
+            self.slot_prompt[s] = None
+            if self.paged:
+                self._release_slot_pages(s)
+            return
+        self.budget[s] -= 1
+        self.last_tok[s] = tok0
+        self.active[s] = True
+
     def _preempt_lowest(self) -> bool:
-        """Page exhaustion mid-decode: free the lowest-priority (latest
-        arrival) active slot and requeue its request through the normal
-        admission path, with the tokens generated so far folded into the
-        prompt — the greedy continuation is token-for-token identical."""
-        cands = [s for s in range(self.scfg.n_slots) if self.active[s]]
+        """Page exhaustion mid-decode: free the latest-arrival occupied
+        slot (ties by rid) — decoding or mid-prefill —
+        and requeue its request through the normal admission path, with
+        the tokens generated so far folded into the prompt — the greedy
+        continuation is token-for-token identical."""
+        cands = [s for s in range(self.scfg.n_slots)
+                 if self.active[s] or self.prefilling[s]]
         if not cands:
             return False
         s = max(cands, key=lambda c: (self.requests[self.slot_rid[c]].arrival,
@@ -744,7 +715,9 @@ class SlotPoolEngine:
             rid=rid, tokens=toks, max_new=int(self.budget[s]),
             frames=orig.frames, arrival=orig.arrival, resume=True))
         self.active[s] = False
+        self.prefilling[s] = False
         self.slot_rid[s] = None
+        self.slot_prompt[s] = None
         self._release_slot_pages(s)
         self.stats["preemptions"] += 1
         return True
@@ -752,7 +725,7 @@ class SlotPoolEngine:
     def _ensure_burst_pages(self, steps: int) -> None:
         """Grow every active slot's block table to cover its next ``steps``
         decode writes.  Exhaustion evicts prefix-cache LRU pages first
-        (inside ``_alloc_pages``), then preempts the lowest-priority slot
+        (inside ``_alloc_pages``), then preempts the latest-arrival slot
         and retries — the freed pages unblock the rest of the pool."""
         while True:
             short = False
@@ -782,7 +755,8 @@ class SlotPoolEngine:
         r = self.requests[rid]
         self.completions[rid] = Completion(
             rid=rid, tokens=self.outputs[rid], prompt_len=len(r.tokens),
-            finished_at=now, arrival=r.arrival)
+            finished_at=now, arrival=r.arrival,
+            token_times=list(self.out_times[rid]))
 
     # -- decode --------------------------------------------------------
 
@@ -823,6 +797,7 @@ class SlotPoolEngine:
             toks = emits[:, s]
             toks = toks[toks != PAD].tolist()
             self.outputs[self.slot_rid[s]].extend(toks)
+            self.out_times[self.slot_rid[s]].extend([now] * len(toks))
             self.stats["tokens_emitted"] += len(toks)
             if not self.active[s]:                      # freed on device
                 self._finish(self.slot_rid[s], now)
@@ -890,6 +865,7 @@ class SlotPoolEngine:
             row = emitted[s]
             row = row[row != PAD].tolist()
             self.outputs[self.slot_rid[s]].extend(row)
+            self.out_times[self.slot_rid[s]].extend([now] * len(row))
             self.stats["tokens_emitted"] += len(row)
             self.stats["draft_tokens"] += int(n_draft[s])
             self.stats["accepted_tokens"] += int(n_acc[s])
@@ -936,10 +912,11 @@ class SlotPoolEngine:
         queue = self._queue = deque(sorted(requests, key=lambda r: r.arrival))
         t0 = time.perf_counter()
         continuous = self.scfg.scheduler in ("continuous", "spec")
-        while queue or self.active.any():
+        while queue or self.active.any() or self.prefilling.any():
             now = time.perf_counter() - t0
-            free = int((~self.active).sum())  # slot_rid is None iff inactive
-            can_admit = continuous or not self.active.any()
+            free = sum(1 for rid in self.slot_rid if rid is None)
+            busy = self.active.any() or self.prefilling.any()
+            can_admit = continuous or not busy
             batch = []
             while (can_admit and queue and len(batch) < free
                    and queue[0].arrival <= now):
@@ -947,12 +924,17 @@ class SlotPoolEngine:
             if batch:
                 # page-starved admissions requeue their tail to the front
                 self.admit(batch, time.perf_counter() - t0)
-            if not self.active.any():
-                if queue:  # idle: wait for the next arrival
-                    now = time.perf_counter() - t0
-                    time.sleep(max(0.0, min(queue[0].arrival - now, 0.01)))
-                continue
-            self.burst(time.perf_counter() - t0)
+            if self.prefilling.any():
+                # at most ONE chunk per loop iteration: a long prompt's
+                # prefill interleaves with the decode bursts below instead
+                # of stalling them for the whole prompt
+                self._prefill_step(time.perf_counter() - t0)
+            if self.active.any():
+                self.burst(time.perf_counter() - t0)
+            elif not self.prefilling.any() and queue:
+                # idle: wait for the next arrival
+                now = time.perf_counter() - t0
+                time.sleep(max(0.0, min(queue[0].arrival - now, 0.01)))
         return self.completions
 
 

@@ -20,7 +20,8 @@ Three pieces (DESIGN.md §11):
               with its own dense KV cache, synced lazily by teacher-forcing
               the tokens the target accepted since the last draft.
   verify    — ``build_spec_step``: one jitted call running
-              ``model.verify_step`` (the split-K ``flash_hyft_verify``
+              ``model.prefill_chunk`` (the chunked attend-at-offset
+              primitive, DESIGN.md §12 — the split-K ``flash_hyft_verify``
               kernel under ``attn_mode="kernel"``, dense or paged,
               fp2fx8 dequant fused into the loads), then the
               longest-accepted-prefix selection with EOS/budget applied to
@@ -165,9 +166,10 @@ class ModelDrafter:
 
     The draft model keeps its own dense KV cache over the SAME slot ids and
     syncs lazily: before drafting, the tokens the target accepted since the
-    drafter's last sync are teacher-forced into its cache
-    (``engine.build_teacher_loop`` — the executable the prefix cache
-    already uses), then ``k`` greedy draft tokens are decoded.  Draft
+    drafter's last sync are pushed into its cache through
+    ``engine.build_prefill_chunk`` (the same chunked attend-at-offset
+    executable admission uses), then ``k`` greedy draft tokens are decoded.
+    Draft
     writes past the context roll back by length exactly like the target's
     own rewind: the next sync overwrites them.
 
@@ -221,10 +223,10 @@ class ModelDrafter:
             suf = np.asarray(ctx, np.int32)[self.d_len[s]:]
             toks[s, :len(suf)] = suf
             nv[s] = len(suf)
-        teacher = engine.build_teacher_loop(self.model, self.scfg, m)
-        last, self.cache = teacher(self.params, self.cache,
-                                   jnp.asarray(toks), jnp.asarray(start),
-                                   jnp.asarray(nv), jnp.asarray(gate))
+        sync = engine.build_prefill_chunk(self.model, self.scfg, m)
+        last, self.cache = sync(self.params, self.cache,
+                                jnp.asarray(toks), jnp.asarray(start),
+                                jnp.asarray(nv), jnp.asarray(gate))
         self.model_calls += 1
         d1 = np.asarray(jnp.argmax(last, -1), np.int32)
 
@@ -264,7 +266,7 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
     lengths (B,), active (B,), budget (B,)) -> (emitted (B, k+1)
     PAD-padded, cache, last_tok, lengths, active, budget, n_acc (B,)).
 
-    One ``model.verify_step`` call scores ``[last_tok, draft_1..k]``: lane
+    One ``model.prefill_chunk`` call scores ``[last_tok, draft_1..k]``: lane
     ``j``'s argmax is the token sequential greedy decode would emit after
     ``j`` accepted drafts, so the longest prefix with ``draft[j] ==
     argmax[j-1]`` (a cumprod of matches — monotone, no scan) IS the vanilla
@@ -288,9 +290,9 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
              budget):
         toks = jnp.concatenate([last_tok, draft], axis=1)          # (B, S)
         n_valid = jnp.where(active, n_draft + 1, 1)
-        logits, cache = model.verify_step(params, cache, toks, lengths,
-                                          n_valid=n_valid,
-                                          write_mask=active)
+        logits, cache = model.prefill_chunk(params, cache, toks, lengths,
+                                            lengths=n_valid,
+                                            write_mask=active)
         greedy = jnp.argmax(logits, -1).astype(I32)                # (B, S)
         lane = jnp.arange(S, dtype=I32)[None]
         dmask = jnp.arange(k, dtype=I32)[None] < n_draft[:, None]

@@ -393,9 +393,9 @@ def test_prefix_cache_shares_pages_between_live_slots():
 
 
 def test_page_exhaustion_preempts_and_requeues():
-    """A pool too small for three full sequences must preempt the lowest
-    priority slot, requeue it through admission, and still produce the
-    exact greedy outputs at full length."""
+    """A pool too small for three full sequences must preempt the
+    latest-arrival slot, requeue it through admission, and still produce
+    the exact greedy outputs at full length."""
     from repro.serve.scheduler import SlotPoolEngine
     cfg, model, params = _setup()
     rng = np.random.default_rng(3)
@@ -441,9 +441,11 @@ def test_eviction_cannot_steal_matched_prefix_pages():
     # grow rid 0's block table, publish rid 1's pages to the trie, then
     # admit rid 2 exactly when free pages < its un-matched demand
     eng.admit([reqs[0]], 0.0)
+    eng._prefill_step(0.0)
     eng.burst(0.0)
     eng.burst(0.0)
     eng.admit([reqs[1]], 0.0)
+    eng._prefill_step(0.0)
     assert eng.completions[1].tokens and int(eng.active.sum()) == 1
     assert eng.pool.free_pages < 2            # the pressure the bug needs
     eng.admit([reqs[2]], 0.0)
@@ -453,9 +455,12 @@ def test_eviction_cannot_steal_matched_prefix_pages():
     for s in range(scfg.n_slots):
         pages = eng.slot_pages[s]
         assert len(pages) == len(set(pages)), f"slot {s} aliases {pages}"
-    while eng.active.any() or eng._queue:     # drain, re-admitting requeues
-        if eng._queue and not eng.active.all():
+    while eng.active.any() or eng.prefilling.any() or eng._queue:
+        # drain, re-admitting requeues
+        if eng._queue and any(rid is None for rid in eng.slot_rid):
             eng.admit([eng._queue.popleft()], 0.0)
+        if eng.prefilling.any():
+            eng._prefill_step(0.0)
         if eng.active.any():
             eng.burst(0.0)
     solo_cfg = ServeConfig(max_len=24, cache_dtype="float32")
