@@ -31,6 +31,18 @@ Four workloads through ``repro.serve.scheduler``:
       Outputs are identical; the benchmark records TTFT and
       time-between-tokens (TBT) p50/p99, where bounded prefill stalls show
       up directly as a lower TBT tail.
+  chaos (``--chaos``) — the robustness contract under seeded fault
+      injection (``repro.serve.chaos``, DESIGN.md §13): four serving
+      configs (dense fp32, dense fp2fx8, paged+prefix, speculative) each
+      run fault-free and then under a ``FaultPlan`` mixing forced
+      preemptions, NaN/Inf KV poison, trie-eviction storms, page-pool
+      squeezes, drafter desync, stragglers, and cancellations — with
+      ``audit=True`` so pool/trie refcounts are recomputed at every
+      checkpoint.  CI asserts every request reaches a DEFINITE outcome,
+      non-poisoned completions are token-identical to the fault-free run,
+      and the audits stayed clean.  All requests arrive at t=0 with no
+      deadlines, making the scheduling sequence wall-clock-free and the
+      fault replay deterministic.
 
 Reports aggregate tokens/sec, request latency p50/p99 (completion − Poisson
 arrival), TTFT/TBT percentiles, and mean slot occupancy; results land in
@@ -199,17 +211,21 @@ def make_mixed_workload(cfg, n, rng, short, long_, frac_long, new, rate_hz):
 
 
 def run(report, smoke: bool = False, prefix_only: bool = False,
-        spec_only: bool = False, chunked_only: bool = False):
+        spec_only: bool = False, chunked_only: bool = False,
+        chaos_only: bool = False):
     """Returns the machine-readable results dict (also printed as CSV).
 
     ``prefix_only`` runs just the shared-prefix section, ``spec_only`` just
-    the repetitive/speculative section, and ``chunked_only`` just the mixed
-    long/short chunked-prefill section — the paged-serve, spec-serve, and
-    chunked-serve CI jobs each assert on one comparison and need not pay
-    for the others.
+    the repetitive/speculative section, ``chunked_only`` just the mixed
+    long/short chunked-prefill section, and ``chaos_only`` just the
+    fault-injection robustness section — the paged-serve, spec-serve,
+    chunked-serve, and chaos-serve CI jobs each assert on one comparison
+    and need not pay for the others.
     """
     from repro.configs.base import ServeConfig
     cfg, model, params = _build()
+    if chaos_only:
+        return _run_chaos(report, {}, cfg, model, params, smoke)
     # arrival rate is set well above the service rate so a queue builds —
     # the regime where the admission policy matters (an unsaturated pool
     # admits small groups either way and the two schedulers converge)
@@ -403,6 +419,150 @@ def _run_chunked(report, results, cfg, model, params, rng, smoke):
     return results
 
 
+def _run_chaos(report, results, cfg, model, params, smoke):
+    """Fault-injection robustness section (DESIGN.md §13).
+
+    Each serving config runs the SAME workload twice on fresh engines: once
+    fault-free (the oracle) and once with a seeded :class:`FaultPlan` and
+    ``audit=True``.  The contract under test:
+
+      definite   — every submitted rid ends with exactly one Completion
+                   (finished, cancelled, or a structured failure) — no
+                   hangs, no silently dropped requests.
+      identical  — every ok completion whose KV was never poisoned emits
+                   tokens identical to the fault-free run (preemptions,
+                   evictions, squeezes, junk drafts, and stragglers are
+                   invisible to the arithmetic).  Poisoned rids recover
+                   through quarantine -> re-prefill and usually ALSO match
+                   (reported separately as ``poisoned_match``) but the
+                   strict gate excludes them: the fp32 retry rung of the
+                   degradation ladder is allowed to differ.
+      audited    — pool/trie refcounts recomputed from live slots + trie
+                   edges at every admission/finish/preemption checkpoint;
+                   any drift raises AuditError and fails the bench.
+
+    Every request arrives at t=0 with no deadline, so the scheduling
+    sequence is wall-clock-free and a fixed seed replays identical faults.
+    """
+    from repro.configs.base import ServeConfig
+    from repro.serve.chaos import ChaosMonkey, FaultPlan
+    from repro.serve.scheduler import Request, SlotPoolEngine
+
+    if smoke:
+        n, slots, burst, head, tail, new = 10, 4, 4, 16, (3, 6), (6, 16)
+    else:
+        n, slots, burst, head, tail, new = 20, 6, 4, 24, (4, 10), (8, 32)
+
+    def prefix_reqs():
+        # two shared 'system prompt' heads + unique tails: populates the
+        # radix trie (so eviction storms have something to evict) while
+        # keeping prompts short; all-zero arrivals for determinism
+        r = np.random.default_rng(7)
+        heads = [r.integers(0, cfg.vocab, head).astype(np.int32)
+                 for _ in range(2)]
+        return [Request(
+            rid=i,
+            tokens=np.concatenate(
+                [heads[i % 2],
+                 r.integers(0, cfg.vocab,
+                            int(r.integers(tail[0], tail[1] + 1))).astype(
+                                np.int32)]),
+            max_new=int(r.integers(new[0], new[1] + 1)),
+            arrival=0.0) for i in range(n)]
+
+    def repetitive_reqs():
+        # tiled-motif prompts keep the n-gram drafter hot so the
+        # drafter-desync fault actually has drafts to corrupt
+        r = np.random.default_rng(8)
+        reqs = []
+        for i in range(n):
+            motif = r.integers(0, cfg.vocab, 6).astype(np.int32)
+            toks = np.concatenate(
+                [np.tile(motif, 4),
+                 r.integers(0, cfg.vocab, 4).astype(np.int32)])
+            reqs.append(Request(rid=i, tokens=toks,
+                                max_new=int(r.integers(new[0], new[1] + 1)),
+                                arrival=0.0))
+        return reqs
+
+    configs = [
+        ("dense_fp32", prefix_reqs,
+         dict(cache_dtype="float32", scheduler="continuous"),
+         FaultPlan(seed=11, preempt_rate=0.15, nan_kv_rate=0.10,
+                   cancel_rate=0.04, straggle_rate=0.10, straggle_s=0.01,
+                   max_faults=6)),
+        # fp2fx8: int8 raws cannot hold a NaN, so the poison lands in the
+        # fp32 scale rows — the hybrid-format silent-corruption shape the
+        # numeric guards exist for
+        ("dense_fp2fx8", prefix_reqs,
+         dict(cache_dtype="fp2fx8", scheduler="continuous"),
+         FaultPlan(seed=12, preempt_rate=0.10, nan_kv_rate=0.15,
+                   max_faults=6)),
+        ("paged_prefix", prefix_reqs,
+         dict(cache_dtype="float32", scheduler="continuous",
+              kv_layout="paged", page_size=8, prefix_cache=True),
+         FaultPlan(seed=13, preempt_rate=0.10, evict_storm_rate=0.15,
+                   squeeze_rate=0.15, squeeze_frac=0.5, squeeze_hold=2,
+                   nan_kv_rate=0.10, cancel_rate=0.04, max_faults=8)),
+        ("spec", repetitive_reqs,
+         dict(cache_dtype="float32", scheduler="spec", draft_k=4),
+         FaultPlan(seed=14, drafter_junk_rate=0.4, preempt_rate=0.10,
+                   cancel_rate=0.04, max_faults=8)),
+    ]
+
+    def _serve(scfg, reqs, plan=None):
+        monkey = ChaosMonkey(plan) if plan is not None else None
+        eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+        eng.prewarm(max(len(r.tokens) for r in reqs))
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        return done, eng, monkey, time.perf_counter() - t0
+
+    results["chaos"] = {
+        "workload": {"requests": n, "n_slots": slots, "decode_burst": burst,
+                     "prefix_head": head, "tail_len": list(tail),
+                     "max_new": list(new)},
+        "configs": {}}
+    report(f"bench_serve,chaos_workload,requests={n},slots={slots},"
+           f"head={head},tail={tail}")
+    for name, mk, kw, plan in configs:
+        reqs = mk()
+        max_len = max(len(r.tokens) + r.max_new for r in reqs) + 1
+        scfg = ServeConfig(max_len=max_len, n_slots=slots,
+                           decode_burst=burst, audit=True, **kw)
+        base_done, _, _, _ = _serve(scfg, reqs)
+        done, eng, monkey, wall = _serve(scfg, reqs, plan)
+        rids = {r.rid for r in reqs}
+        definite = set(done) == rids
+        oks = {rid: c for rid, c in done.items() if c.ok}
+        clean = {rid: c for rid, c in oks.items()
+                 if rid not in monkey.faulted_rids}
+        match = all(c.tokens == base_done[rid].tokens
+                    for rid, c in clean.items())
+        poisoned = {rid: c for rid, c in oks.items()
+                    if rid in monkey.faulted_rids}
+        poisoned_match = all(c.tokens == base_done[rid].tokens
+                             for rid, c in poisoned.items())
+        st = eng.stats
+        r = {"requests": n, "ok": len(oks),
+             "cancelled": sum(1 for c in done.values() if c.cancelled),
+             "failed": sum(1 for c in done.values()
+                           if c.failure is not None),
+             "definite": definite, "outputs_match": match,
+             "poisoned": len(poisoned), "poisoned_match": poisoned_match,
+             "faults": monkey.summary(), "audits": st["audits"],
+             "quarantines": st["quarantines"],
+             "fp32_retries": st["fp32_retries"],
+             "preemptions": st["preemptions"], "wall_s": wall}
+        results["chaos"]["configs"][name] = r
+        report(f"bench_serve,chaos_{name},ok={len(oks)}/{n},"
+               f"cancelled={r['cancelled']},failed={r['failed']},"
+               f"faults={monkey.n_faults},quarantines={r['quarantines']},"
+               f"definite={definite},outputs_match={match},"
+               f"audits={r['audits']}")
+    return results
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -421,6 +581,9 @@ if __name__ == "__main__":
     ap.add_argument("--chunked-only", action="store_true",
                     help="run only the mixed long/short-prompt (chunked vs "
                          "whole-prompt prefill) section")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the fault-injection robustness section "
+                         "(seeded FaultPlan per serving config, audits on)")
     ap.add_argument("--merge", action="store_true",
                     help="update an existing --json file in place (a "
                          "section-only run keeps the other sections' "
@@ -428,7 +591,8 @@ if __name__ == "__main__":
                          "own fresh process)")
     args = ap.parse_args()
     res = run(print, smoke=args.smoke, prefix_only=args.prefix_only,
-              spec_only=args.spec_only, chunked_only=args.chunked_only)
+              spec_only=args.spec_only, chunked_only=args.chunked_only,
+              chaos_only=args.chaos)
     out: dict = {}
     if args.merge and os.path.exists(args.json):
         with open(args.json) as f:

@@ -74,13 +74,28 @@ if args.spec:
 
 outs = {}
 for name, kw in variants:
+    # audit=True: pool/trie refcounts are recomputed from first principles
+    # at every admission/finish/preemption checkpoint (DESIGN.md §13)
     scfg = ServeConfig(max_len=48, cache_dtype="float32",
                        scheduler=kw.pop("scheduler", "continuous"),
                        n_slots=4, decode_burst=4, eos_id=None,
                        prefill_chunk=args.prefill_chunk,
-                       pack_prefill=args.pack_prefill, **kw)
+                       pack_prefill=args.pack_prefill, audit=True, **kw)
     eng = SlotPoolEngine(model, params, scfg)
-    done = eng.run(reqs)
+    try:
+        done = eng.run(reqs)
+    except KeyboardInterrupt:
+        # graceful drain: unfinished requests become partial Completions
+        # with cancelled=True instead of a traceback losing everything
+        done = eng.shutdown()
+        npart = sum(1 for c in done.values() if c.cancelled)
+        print(f"\ninterrupted during {name}: {npart} request(s) drained "
+              "as cancelled, partial tokens kept:")
+        for rid in sorted(done):
+            c = done[rid]
+            print(f"  [{rid}]{' cancelled' if c.cancelled else ''} "
+                  f"{c.tokens}")
+        raise SystemExit(130)
     outs[name] = {rid: c.tokens for rid, c in done.items()}
     st = eng.stats
     extra = (f" cached={st['cached_tokens']} hits={st['prefix_hits']}"

@@ -173,6 +173,21 @@ class ServeConfig:
     # zoo arch name for spec_mode="model" launched from the CLI (random
     # init unless params are injected — a demo drafter, not a good one)
     draft_model: Optional[str] = None
+    # --- serving robustness (repro/serve/chaos.py, DESIGN.md §13) ---
+    # recompute page-pool/radix-trie refcounts from live slots + trie edges
+    # and cross-check the free list after every admission / finish /
+    # preemption / quarantine checkpoint (kvpool.AuditError on drift) —
+    # host-only, never part of a jit compilation key
+    audit: bool = False
+    # bounded admission queue: an ARRIVAL that would push the waiting queue
+    # past this many requests is rejected with a structured "queue_full"
+    # failure instead of waiting unboundedly (0 = unbounded; requeues from
+    # preemption/quarantine are exempt — they already held an admission)
+    max_queue: int = 0
+    # per-request requeue budget (preemptions + numeric quarantines): one
+    # more requeue past this surfaces a "retries_exhausted" failure with
+    # the partial tokens instead of looping forever under pressure
+    max_retries: int = 32
 
 
 @dataclasses.dataclass(frozen=True)

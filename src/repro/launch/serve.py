@@ -82,6 +82,22 @@ def main():
                     help="pack every prefilling slot into one bucketed "
                          "chunk call (--no-pack-prefill = one prompt at a "
                          "time in arrival order, an ablation knob)")
+    ap.add_argument("--audit", action="store_true",
+                    help="recompute page-pool/radix-trie refcounts at every "
+                         "admission/finish/preemption checkpoint and fail "
+                         "loudly on drift (DESIGN.md §13)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: arrivals past this many "
+                         "waiting requests fail with reason 'queue_full' "
+                         "(0 = unbounded)")
+    ap.add_argument("--max-retries", type=int, default=32,
+                    help="per-request requeue budget (preemptions + numeric "
+                         "quarantines) before a structured "
+                         "'retries_exhausted' failure")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request TTL in seconds: a request unfinished "
+                         "at its deadline fails with reason 'deadline' and "
+                         "frees its slot/pages within one burst")
     ap.add_argument("--batch", type=int, default=4,
                     help="lockstep batch size / continuous request count")
     ap.add_argument("--prefill", type=int, default=16,
@@ -140,7 +156,10 @@ def main():
                        spec_mode=args.spec_mode,
                        draft_k=args.draft_k,
                        ngram_max=args.ngram_max,
-                       draft_model=args.draft_model)
+                       draft_model=args.draft_model,
+                       audit=args.audit,
+                       max_queue=args.max_queue,
+                       max_retries=args.max_retries)
 
     # the paged layout, prefix cache, spec decoding, and chunked prefill
     # live in the slot-pool scheduler, so those flags route through it even
@@ -164,13 +183,24 @@ def main():
                 tokens=rng.integers(0, cfg.vocab, plen).astype(np.int32),
                 max_new=int(rng.integers(max(1, args.max_new // 2),
                                          args.max_new + 1)),
-                frames=frames))
+                frames=frames, deadline=args.deadline))
         eng = SlotPoolEngine(model, params, scfg, key=sample_key)
-        done = eng.run(reqs)
+        try:
+            done = eng.run(reqs)
+        except KeyboardInterrupt:
+            # graceful drain: in-flight slots free, every unfinished
+            # request gets a partial Completion with cancelled=True —
+            # no traceback, no lost work (DESIGN.md §13)
+            done = eng.shutdown()
+            print("\ninterrupted: drained "
+                  f"{sum(1 for c in done.values() if c.cancelled)} "
+                  "in-flight/queued requests as cancelled")
         for rid in sorted(done):
             c = done[rid]
-            print(f"[{rid}] prompt={c.prompt_len} new={len(c.tokens)} "
-                  f"{c.tokens}")
+            tag = ("" if c.ok else " CANCELLED" if c.cancelled
+                   else f" FAILED({c.failure.reason})")
+            print(f"[{rid}] prompt={c.prompt_len} new={len(c.tokens)}"
+                  f"{tag} {c.tokens}")
         if args.scheduler == "spec":
             st = eng.stats
             acc = st["accepted_tokens"] / max(1, st["draft_tokens"])

@@ -1,0 +1,259 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §13).
+
+The robustness contract — every request terminates with a definite
+outcome, audits stay clean, non-faulted greedy outputs never change — is
+only worth anything if it survives faults that actually happen.  This
+module injects them on purpose, seeded and reproducible:
+
+  forced preemption   — ``SlotPoolEngine._preempt_latest`` fires without
+                        page pressure, exercising the requeue/resume path.
+  trie-eviction storm — every evictable prefix-cache leaf is dropped at
+                        once: prefix hits vanish mid-run, refcounts must
+                        hold.
+  page-pool squeeze   — a fraction of the free pages is allocated and held
+                        for a few scheduler ticks: admissions see
+                        exhaustion (requeue-with-retry), decode page
+                        appends see it (preemption).  The held pages are
+                        registered as an extra audit holder so the
+                        refcount recomputation still balances.
+  NaN/Inf KV poison   — non-finite payloads written into a slot's
+                        EXCLUSIVE KV page (paged) or cache row (dense) —
+                        the silent-corruption shape hybrid-format
+                        accelerators must guard: ``core/numerics.py``
+                        fp2fx conversion saturates ±inf and maps NaN -> 0,
+                        so a bad scale row corrupts quietly while the
+                        logits go non-finite loudly.  The scheduler's
+                        numeric guards must quarantine exactly that slot.
+  drafter desync      — a speculative slot's draft row is replaced with
+                        junk: exact verification must reject it with the
+                        outputs provably unchanged.
+  burst straggler     — an artificial stall before a burst, flagged by the
+                        ``StragglerMonitor`` the scheduler wires burst
+                        wall times into.
+  cancellation        — a random in-flight/queued request is cancelled
+                        through the host ``cancel(rid)`` API.
+
+Injection points (``ChaosMonkey.fire(eng, point)``):
+
+  "tick"      — top of every scheduling-loop iteration, BEFORE admission:
+                squeeze/release, eviction storms, cancellations.
+  "pre_burst" — immediately before a decode/spec burst: forced
+                preemptions, KV poison, stragglers.
+  (spec drafting consults ``corrupt_drafts`` directly — the draft tensors
+  only exist inside ``_spec_burst``.)
+
+Determinism: one ``numpy`` Generator seeded by ``FaultPlan.seed`` drives
+every decision, so a fixed seed + a fixed scheduling sequence replays the
+same faults.  The scheduling sequence itself is wall-clock-free when every
+request arrives at 0.0 with no deadlines — the regime the chaos bench and
+tests run in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-injection-point fault probabilities (all in [0, 1]).
+
+    A zero-everything plan injects nothing; ``max_faults`` caps the total
+    number of injected faults so a high-rate plan still lets the run
+    finish its tail quietly."""
+    seed: int = 0
+    preempt_rate: float = 0.0       # pre_burst: force-preempt latest slot
+    evict_storm_rate: float = 0.0   # tick: evict every prefix-cache leaf
+    squeeze_rate: float = 0.0       # tick: hold free pages hostage
+    squeeze_frac: float = 0.5       # fraction of free pages a squeeze takes
+    squeeze_hold: int = 3           # scheduler ticks a squeeze lasts
+    nan_kv_rate: float = 0.0        # pre_burst: poison exclusive KV
+    nan_kind: str = "nan"           # "nan" | "inf" payload
+    drafter_junk_rate: float = 0.0  # spec drafting: junk one slot's draft
+    straggle_rate: float = 0.0      # pre_burst: artificial stall
+    straggle_s: float = 0.0         # stall duration (seconds)
+    cancel_rate: float = 0.0        # tick: cancel a random live request
+    max_faults: int = 1 << 30
+
+
+class ChaosMonkey:
+    """Consults a :class:`FaultPlan` at the scheduler's injection points.
+
+    Attach via ``SlotPoolEngine(..., chaos=ChaosMonkey(plan))`` (or
+    ``serve(..., chaos=...)``).  ``faulted_rids`` collects the requests a
+    KV poison actually touched — the one fault class that may legitimately
+    alter a request's path (quarantine -> recompute), so benches exclude
+    them from strict output-identity checks (recovery makes even those
+    match unless the fp32 ladder exhausts).  ``log`` records every
+    injected fault as a dict for post-mortem."""
+
+    def __init__(self, plan: FaultPlan):
+        if plan.nan_kind not in ("nan", "inf"):
+            raise ValueError(f"unknown nan_kind {plan.nan_kind!r}")
+        self.plan = plan
+        self.rng = np.random.default_rng(plan.seed)
+        self.log: list = []
+        self.n_faults = 0
+        self.faulted_rids: set = set()
+        self._held: list = []           # squeezed pages (an audit holder)
+        self._hold_left = 0
+
+    # -- plumbing ------------------------------------------------------
+
+    def _maybe(self, rate: float) -> bool:
+        """One deterministic uniform per consult; fires iff under ``rate``
+        with fault budget remaining."""
+        u = self.rng.random()
+        return u < rate and self.n_faults < self.plan.max_faults
+
+    def _log(self, point: str, kind: str, **detail) -> None:
+        self.n_faults += 1
+        self.log.append(dict(point=point, kind=kind, **detail))
+
+    def summary(self) -> dict:
+        by_kind: dict = {}
+        for e in self.log:
+            by_kind[e["kind"]] = by_kind.get(e["kind"], 0) + 1
+        return {"faults": self.n_faults, "by_kind": by_kind,
+                "faulted_rids": sorted(self.faulted_rids)}
+
+    # -- injection points ----------------------------------------------
+
+    def fire(self, eng, point: str) -> None:
+        if point == "tick":
+            self._tick(eng)
+        elif point == "pre_burst":
+            self._pre_burst(eng)
+        else:
+            raise ValueError(f"unknown injection point {point!r}")
+
+    def _tick(self, eng) -> None:
+        self._squeeze_step(eng)
+        if self._maybe(self.plan.evict_storm_rate) and eng.trie is not None:
+            freed = eng.trie.evict(1 << 30)
+            if freed:
+                self._log("tick", "evict_storm", pages=freed)
+        if (self._maybe(self.plan.squeeze_rate) and eng.paged
+                and not self._held):
+            take = int(eng.pool.free_pages * self.plan.squeeze_frac)
+            pages = eng.pool.alloc(take) if take > 0 else None
+            if pages:
+                self._held = pages
+                self._hold_left = max(1, self.plan.squeeze_hold)
+                eng._extra_holders.append(self._held)
+                self._log("tick", "squeeze", pages=len(pages))
+        if self._maybe(self.plan.cancel_rate):
+            u = self.rng.random()
+            cands = sorted({rid for rid in eng.slot_rid if rid is not None}
+                           | {r.rid for r in eng._queue})
+            if cands:
+                rid = cands[int(u * len(cands)) % len(cands)]
+                eng.cancel(rid)
+                self._log("tick", "cancel", rid=rid)
+
+    def _pre_burst(self, eng) -> None:
+        if self._maybe(self.plan.preempt_rate):
+            if eng._preempt_latest():
+                self._log("pre_burst", "preempt")
+        if self._maybe(self.plan.nan_kv_rate):
+            self._poison(eng)
+        if self._maybe(self.plan.straggle_rate) and self.plan.straggle_s > 0:
+            time.sleep(self.plan.straggle_s)
+            self._log("pre_burst", "straggle", seconds=self.plan.straggle_s)
+
+    # -- fault payloads ------------------------------------------------
+
+    def _squeeze_step(self, eng) -> None:
+        """Count a held squeeze down one tick; release the pages when it
+        expires (refcounts flow back through the normal decref path)."""
+        if not self._held:
+            return
+        self._hold_left -= 1
+        if self._hold_left > 0:
+            return
+        eng._extra_holders.remove(self._held)
+        for p in self._held:
+            eng.pool.decref(p)
+        self._log("tick", "squeeze_release", pages=len(self._held))
+        self._held = []
+
+    def _poison(self, eng) -> bool:
+        """Write a non-finite payload into one active slot's KV.
+
+        Paged: the slot-EXCLUSIVE (refcount-1) page holding the read
+        frontier (position ``length - 1``) — decode writes only ever land
+        in exclusive tail pages, so that is the realistic fault site, and
+        poisoning a trie-shared page would corrupt OTHER requests, which
+        even the chaos harness must never do.  Dense: every float leaf row
+        of the slot (for fp2fx8 the int8 raws cannot hold a NaN — the
+        fp32 scale rows carry the poison, exactly the Hyft-relevant
+        fault).  The touched rid goes into ``faulted_rids``."""
+        val = float("nan") if self.plan.nan_kind == "nan" else float("inf")
+        u = self.rng.random()
+        if eng.paged:
+            ps = eng.scfg.page_size
+            cands = []
+            for s in range(eng.scfg.n_slots):
+                if not eng.active[s]:
+                    continue
+                bi = (int(eng.lengths[s]) - 1) // ps
+                if bi < len(eng.slot_pages[s]):
+                    p = eng.slot_pages[s][bi]
+                    if eng.pool.refs[p] == 1:
+                        cands.append((s, p))
+            if not cands:
+                return False
+            s, p = cands[int(u * len(cands)) % len(cands)]
+            eng.cache["blocks"] = jax.tree.map(
+                lambda lf: (lf.at[:, p].set(val)
+                            if jnp.issubdtype(lf.dtype, jnp.floating)
+                            else lf),
+                eng.cache["blocks"])
+        else:
+            live = [s for s in range(eng.scfg.n_slots) if eng.active[s]]
+            if not live:
+                return False
+            s = live[int(u * len(live)) % len(live)]
+            if eng._axes is None:
+                from repro.serve import scheduler as sched
+                eng._axes = sched._cache_batch_axes(
+                    eng.model, eng.params, eng.scfg.max_len,
+                    eng.scfg.cache_dtype)
+
+            def poi(lf, ax):
+                if not jnp.issubdtype(lf.dtype, jnp.floating):
+                    return lf
+                m = jnp.moveaxis(lf, ax, 0)
+                return jnp.moveaxis(m.at[s].set(val), 0, ax)
+
+            eng.cache = jax.tree.map(poi, eng.cache, eng._axes)
+        rid = eng.slot_rid[s]
+        self.faulted_rids.add(rid)
+        self._log("pre_burst", "nan_kv", rid=rid, slot=int(s),
+                  payload=self.plan.nan_kind)
+        return True
+
+    def corrupt_drafts(self, eng, draft, n_draft, want):
+        """Drafter-desync fault: replace one drafting slot's row with junk
+        tokens at the full draft width.  Exact verification rejects every
+        mismatching lane, so outputs are PROVABLY unchanged — the fault
+        only costs the slot its speculative speedup for one step."""
+        if not self._maybe(self.plan.drafter_junk_rate):
+            return draft, n_draft
+        u = self.rng.random()
+        cands = [s for s in range(eng.scfg.n_slots) if want[s] > 0]
+        if not cands:
+            return draft, n_draft
+        s = cands[int(u * len(cands)) % len(cands)]
+        k = draft.shape[1]
+        draft = np.array(draft)
+        n_draft = np.array(n_draft)
+        draft[s, :] = (eng.model.cfg.vocab - 1
+                       - np.arange(k, dtype=np.int32) % 2)
+        n_draft[s] = int(min(want[s], k))
+        self._log("draft", "drafter_junk", rid=eng.slot_rid[s], slot=int(s))
+        return draft, n_draft

@@ -34,11 +34,22 @@ kernels, the scatter that redirects masked writes to page 0 — live in
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
 NULL_PAGE = 0  # reserved sink page: masked writes land here, never read
+
+
+class AuditError(AssertionError):
+    """A pool/trie invariant failed an ``audit()`` recomputation.
+
+    Raised instead of silently serving from corrupt bookkeeping: a wrong
+    refcount either leaks pages (capacity slowly vanishes) or double-frees
+    them (two requests share one physical page and corrupt each other) —
+    the serving-robustness contract (DESIGN.md §13) is that the scheduler
+    surfaces this immediately at the checkpoint that created it.
+    """
 
 
 class PagePool:
@@ -79,6 +90,52 @@ class PagePool:
         self.refs[page] -= 1
         if self.refs[page] == 0:
             self._free.append(page)
+
+    def audit(self, holders: Iterable[list],
+              trie: Optional["RadixTrie"] = None) -> None:
+        """Recompute every refcount from first principles and cross-check.
+
+        ``holders``: the live slots' page lists (a slot's block table must
+        never alias one physical page at two virtual blocks).  ``trie``:
+        the prefix cache, if any — each page a trie node references holds
+        exactly one trie count.  Verifies, raising :class:`AuditError`:
+
+          * recomputed count == stored ``refs`` for every page;
+          * the null page is never held, never freed, never allocated;
+          * the free list has no duplicates (double-free), holds exactly
+            the refcount-0 pages, and is disjoint from every holder.
+        """
+        expected = np.zeros(self.n_pages + 1, np.int64)
+        expected[NULL_PAGE] = 1
+        for i, pages in enumerate(holders):
+            if len(pages) != len(set(pages)):
+                raise AuditError(f"holder {i} aliases a page twice: {pages}")
+            for p in pages:
+                if p == NULL_PAGE:
+                    raise AuditError(f"holder {i} holds the null page")
+                if not 0 < p <= self.n_pages:
+                    raise AuditError(f"holder {i} holds out-of-range {p}")
+                expected[p] += 1
+        if trie is not None:
+            for p in trie.audit():
+                expected[p] += 1
+        stored = self.refs.astype(np.int64)
+        if not np.array_equal(stored, expected):
+            bad = np.nonzero(stored != expected)[0]
+            raise AuditError(
+                f"refcount drift at pages {bad.tolist()}: "
+                f"stored {stored[bad].tolist()} != "
+                f"recomputed {expected[bad].tolist()}")
+        free = self._free
+        if len(free) != len(set(free)):
+            raise AuditError("free list holds a page twice (double-free)")
+        if NULL_PAGE in free:
+            raise AuditError("null page on the free list")
+        want_free = {int(p) for p in np.nonzero(expected == 0)[0] if p}
+        if set(free) != want_free:
+            raise AuditError(
+                f"free list {sorted(set(free))} != refcount-0 pages "
+                f"{sorted(want_free)}")
 
 
 class _Node:
@@ -217,3 +274,44 @@ class RadixTrie:
             total += len(nd.pages)
             stack.extend(nd.children.values())
         return total
+
+    def audit(self) -> list:
+        """Structural invariants, raising :class:`AuditError` on drift.
+
+        Checks every reachable node: edge labels are whole pages
+        (``len(tokens) == len(pages) * ps``), each child is keyed by its
+        edge's first page of tokens (two siblings can never share a first
+        page), parent back-pointers match the walk, non-root nodes are
+        non-empty, no physical page appears at two trie nodes, and every
+        referenced page's pool refcount covers the trie's reference.
+        Returns the list of all referenced pages (one entry each) so
+        :meth:`PagePool.audit` can fold them into its recomputation.
+        """
+        seen: set = set()
+        out: list = []
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            if nd is not self.root:
+                if not nd.pages:
+                    raise AuditError("empty non-root trie edge")
+                if len(nd.tokens) != len(nd.pages) * self.ps:
+                    raise AuditError(
+                        f"edge label {len(nd.tokens)} tokens != "
+                        f"{len(nd.pages)} pages of {self.ps}")
+            for key, child in nd.children.items():
+                if child.parent is not nd:
+                    raise AuditError("child parent pointer does not match")
+                if tuple(child.tokens[:self.ps]) != tuple(key):
+                    raise AuditError(
+                        f"child keyed {key} but edge starts "
+                        f"{child.tokens[:self.ps]}")
+                stack.append(child)
+            for p in nd.pages:
+                if p in seen:
+                    raise AuditError(f"page {p} referenced at two trie nodes")
+                seen.add(p)
+                if self.pool.refs[p] < 1:
+                    raise AuditError(f"trie references freed page {p}")
+                out.append(p)
+        return out

@@ -97,15 +97,35 @@ PAD = -1  # emitted-token filler for slots that were idle during a burst step
 class Request:
     """One generation request. ``arrival`` is in seconds after ``run()``
     starts (0 = already queued); requests must be submitted in arrival
-    order."""
+    order.  ``deadline`` (seconds after run() start, like ``arrival``) is a
+    hard TTL: a request still unfinished at its deadline is expired with a
+    structured ``deadline`` failure and its slot/pages are freed within one
+    burst (DESIGN.md §13)."""
     rid: int
     tokens: Any                       # (prompt_len,) int token ids
     max_new: int
     frames: Any = None                # encdec: (frontend_len, frontend_dim)
     arrival: float = 0.0
+    deadline: Optional[float] = None
     # internal: a preempted request requeued mid-generation (its prompt
     # already carries the tokens generated so far; outputs are appended)
     resume: bool = False
+
+
+@dataclasses.dataclass
+class FailureInfo:
+    """Why a request ended without running to EOS/budget (DESIGN.md §13).
+
+    ``reason`` is one of: ``invalid`` (malformed request rejected at
+    submission), ``queue_full`` (admission backpressure), ``deadline``
+    (TTL expired), ``numeric_fault`` (non-finite logits survived the
+    quarantine -> fp32-retry ladder), ``retries_exhausted`` (the request
+    was requeued — preemption or quarantine — more than
+    ``ServeConfig.max_retries`` times).  The partial tokens generated
+    before the failure stay on the ``Completion``."""
+    reason: str
+    detail: str = ""
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -120,6 +140,15 @@ class Completion:
     # stamp).  token_times[0] - arrival is the TTFT; successive diffs are
     # the inter-token (TBT) gaps the chunked-prefill scheduling bounds.
     token_times: list = dataclasses.field(default_factory=list)
+    # robustness outcome: every request terminates with a definite one —
+    # ok (finished), cancelled (host cancel/shutdown, partial tokens), or
+    # failure (structured reason, partial tokens)
+    cancelled: bool = False
+    failure: Optional[FailureInfo] = None
+
+    @property
+    def ok(self) -> bool:
+        return not self.cancelled and self.failure is None
 
     @property
     def latency(self) -> float:
@@ -151,21 +180,36 @@ def _burst_key_cfg(scfg: ServeConfig) -> ServeConfig:
     schedulers share one compiled burst (spec honors EOS like continuous).
     The chunk-scheduling knobs are admission policy too — a prefill-chunk
     executable is keyed by its width alone, so chunked and whole-prompt
-    runs share compilations."""
+    runs share compilations — and so are the host-only robustness knobs
+    (audit cadence, queue bound, retry budget): none of them changes the
+    burst arithmetic."""
     eos = scfg.eos_id if scfg.scheduler in ("continuous", "spec") else None
     return dataclasses.replace(scfg, scheduler="", eos_id=eos,
-                               prefill_chunk=0, pack_prefill=True)
+                               prefill_chunk=0, pack_prefill=True,
+                               audit=False, max_queue=0, max_retries=0)
+
+
+TTL_NONE = 1 << 30  # "no deadline" sentinel: never decrements to zero
 
 
 def build_burst(model, scfg: ServeConfig, steps: int):
-    """Jit'd (params, cache, tok, lengths, active, budget, key) ->
-    (emitted (steps, slots), cache, tok, lengths, active, budget, key).
+    """Jit'd (params, cache, tok, lengths, active, budget, ttl, key) ->
+    (emitted (steps, slots), oks (steps, slots), cache, tok, lengths,
+    active, budget, ttl, key).
 
     One ``lax.scan`` of ``steps`` masked decode steps.  Every slot computes
     every step (uniform shapes), but only active slots write their KV
     (``write_mask``), consume budget, advance their length, or emit a token
-    (idle rows emit PAD).  EOS and budget exhaustion flip ``active`` on
-    device; the freed slot's cache is untouched from that step on.
+    (idle rows emit PAD).  EOS, budget exhaustion, and TTL expiry flip
+    ``active`` on device; the freed slot's cache is untouched from that
+    step on.  ``ttl`` is the per-slot step allowance the host derived from
+    the request's wall-clock deadline (``TTL_NONE`` = no deadline): a slot
+    whose allowance runs out stops decoding MID-BURST instead of overrunning
+    its deadline by up to ``steps`` tokens.  ``oks`` is the per-step numeric
+    health bit — False where an ACTIVE slot's next-token logits went
+    non-finite (the host quarantines that slot; idle rows report True) —
+    the cheap all-finite reduction the robustness layer keys on
+    (DESIGN.md §13).
     """
     kcfg = _burst_key_cfg(scfg)
     eos = kcfg.eos_id
@@ -174,33 +218,37 @@ def build_burst(model, scfg: ServeConfig, steps: int):
         return _BURST_CACHE[ck]
 
     @functools.partial(jax.jit, donate_argnums=(1,))
-    def burst(params, cache, tok, lengths, active, budget, key):
+    def burst(params, cache, tok, lengths, active, budget, ttl, key):
         def body(carry, _):
-            cache_c, tok_c, len_c, act_c, bud_c, key_c = carry
+            cache_c, tok_c, len_c, act_c, bud_c, ttl_c, key_c = carry
             if scfg.temperature > 0:
                 key_c, sub = jax.random.split(key_c)
             else:
                 sub = key_c
             logits, cache_c = model.decode_step(params, cache_c, tok_c, len_c,
                                                 write_mask=act_c)
-            nxt = engine._sample(logits[:, -1, :], sub, scfg.temperature,
+            last = logits[:, -1, :]
+            ok = jnp.isfinite(last).all(-1) | ~act_c
+            nxt = engine._sample(last, sub, scfg.temperature,
                                  scfg.top_k, scfg.top_p).astype(I32)
             emit = jnp.where(act_c, nxt, PAD)
             bud_c = bud_c - act_c.astype(I32)
             len_c = len_c + act_c.astype(I32)
-            alive = act_c & (bud_c > 0)
+            ttl_c = ttl_c - act_c.astype(I32)
+            alive = act_c & (bud_c > 0) & (ttl_c > 0)
             if eos is not None:
                 alive = alive & (nxt != eos)
             tok_c = jnp.where(act_c, nxt, tok_c[:, 0])[:, None]
-            return (cache_c, tok_c, len_c, alive, bud_c, key_c), emit
+            return (cache_c, tok_c, len_c, alive, bud_c, ttl_c, key_c), \
+                (emit, ok)
 
-        carry, emits = jax.lax.scan(
-            body, (cache, tok, lengths, active, budget, key), None,
+        carry, (emits, oks) = jax.lax.scan(
+            body, (cache, tok, lengths, active, budget, ttl, key), None,
             length=steps)
-        cache, tok, lengths, active, budget, key = carry
+        cache, tok, lengths, active, budget, ttl, key = carry
         # returning the cache gives the donated input buffers an output to
         # alias with (true in-place burst on TPU)
-        return emits, cache, tok, lengths, active, budget, key
+        return emits, oks, cache, tok, lengths, active, budget, ttl, key
 
     return engine._cache_put(_BURST_CACHE, ck, burst)
 
@@ -274,13 +322,21 @@ class SlotPoolEngine:
     """
 
     def __init__(self, model, params, scfg: ServeConfig, key=None,
-                 draft=None):
+                 draft=None, chaos=None):
+        from repro.distributed.fault_tolerance import StragglerMonitor
         from repro.models import resolve_attn_mode
         self.model = resolve_attn_mode(model, scfg.attn_mode)
         self.params = params
         self.scfg = scfg
         self.key = key if key is not None else jax.random.PRNGKey(0)
         n = scfg.n_slots
+        if scfg.max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
+        if scfg.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        # fault-injection harness (repro/serve/chaos.py): consulted at the
+        # named injection points when attached; None in production
+        self.chaos = chaos
         if scfg.scheduler not in ("continuous", "lockstep", "spec"):
             raise ValueError(f"unknown scheduler {scfg.scheduler!r}")
         if scfg.kv_layout not in ("dense", "paged"):
@@ -348,7 +404,8 @@ class SlotPoolEngine:
         self.out_times: dict[int, list] = {}  # per-token emission stamps
         self.requests: dict[int, Request] = {}
         self.completions: dict[int, Completion] = {}
-        self._queue: deque = deque()
+        self._queue: deque = deque()   # arrived, waiting (bounded)
+        self._pending: deque = deque()  # submitted, not yet arrived
         # chunk prefill writes attention rows in place (the kv_index <=
         # position mask hides a previous occupant's stale KV), but
         # recurrent-state families CONTINUE from the slot's stored state,
@@ -356,6 +413,9 @@ class SlotPoolEngine:
         self._needs_reset = self.model.init_paged_cache is None
         self._encode = (build_encode(self.model)
                         if self.model.encode is not None else None)
+        # the scatter doubles as the dense quarantine scrub, so attention
+        # families build it lazily on the first fault (_scrub_dense_slot)
+        self._axes = self._scatter = None
         if not self.paged and self._needs_reset:
             self._axes = _cache_batch_axes(self.model, params, scfg.max_len,
                                            scfg.cache_dtype)
@@ -370,6 +430,21 @@ class SlotPoolEngine:
                                       max(1, scfg.decode_burst))
         self._eos = (scfg.eos_id
                      if scfg.scheduler in ("continuous", "spec") else None)
+        # --- robustness state (DESIGN.md §13) ---
+        self.retries: dict[int, int] = {}        # requeues per rid
+        self.numeric_faults: dict[int, int] = {}  # quarantines per rid
+        self._cancels: set = set()               # rids to cancel next check
+        # page lists held by parties other than slots/trie (the chaos
+        # harness's pool squeeze) — folded into audit recomputation
+        self._extra_holders: list = []
+        # burst wall-time EMA + outlier flagging; also the per-step time
+        # estimate behind the device-side deadline TTL
+        self.straggler = StragglerMonitor()
+        self._step_ema = 0.0
+        self._t0: Optional[float] = None         # run() epoch, for shutdown
+        # the fp32 fallback engine must fail structurally, never recurse
+        self._allow_fp32_retry = True
+        self._zero_pages = None                  # lazy jitted page scrub
         self.stats = {"admitted": 0, "bursts": 0, "prefills": 0,
                       "burst_steps": 0, "slot_steps_active": 0,
                       "peak_active": 0, "tokens_emitted": 0,
@@ -377,7 +452,10 @@ class SlotPoolEngine:
                       "cached_tokens": 0, "prefix_hits": 0,
                       "preemptions": 0, "pages_peak": 0,
                       "model_calls": 0, "spec_steps": 0,
-                      "draft_tokens": 0, "accepted_tokens": 0}
+                      "draft_tokens": 0, "accepted_tokens": 0,
+                      "rejected": 0, "expired": 0, "cancelled": 0,
+                      "quarantines": 0, "fp32_retries": 0, "failures": 0,
+                      "stragglers": 0, "audits": 0}
 
     # -- warmup --------------------------------------------------------
 
@@ -436,8 +514,10 @@ class SlotPoolEngine:
             out = self._burst(self.params, self.cache,
                               jnp.zeros((n, 1), I32),
                               jnp.zeros(n, I32), jnp.zeros(n, bool),
-                              jnp.zeros(n, I32), jax.random.PRNGKey(0))
-            self.cache = out[1]
+                              jnp.zeros(n, I32),
+                              jnp.full(n, TTL_NONE, I32),
+                              jax.random.PRNGKey(0))
+            self.cache = out[2]
         jax.block_until_ready(out[0])
 
     # -- admission -----------------------------------------------------
@@ -452,14 +532,21 @@ class SlotPoolEngine:
                                   self.scfg.top_k, self.scfg.top_p)
         return jnp.argmax(last, -1)
 
+    def _register(self, r: Request) -> None:
+        """First sighting of a request: create its output/trace records (a
+        resume keeps the ORIGINAL request — its prompt, arrival, and
+        deadline — so preemption folding and TTL stay anchored to it)."""
+        if r.rid not in self.requests:
+            self.requests[r.rid] = r
+            self.outputs[r.rid] = []
+            self.out_times[r.rid] = []
+
     def _start_prefill(self, s: int, r: Request, start: int) -> None:
         """Host bookkeeping that puts ``r`` into slot ``s`` in the
         ``prefilling`` state with ``start`` tokens already cached (prefix
         hits); ``_prefill_step`` feeds the rest chunk by chunk."""
         if not r.resume:
-            self.requests[r.rid] = r
-            self.outputs[r.rid] = []
-            self.out_times[r.rid] = []
+            self._register(r)
             self.stats["admitted"] += 1
         self.slot_rid[s] = r.rid
         self.slot_prompt[s] = np.asarray(r.tokens, np.int32)
@@ -650,15 +737,23 @@ class SlotPoolEngine:
                               jnp.asarray(self.lengths),
                               jnp.asarray(n_valid), jnp.asarray(gate))
         self.stats["prefills"] += 1
-        fin = [s for s in rows if rem[s] <= width]
         for s in rows:
             self.lengths[s] += min(rem[s], width)
+        # numeric health: every gated row's last-lane logits must be finite
+        # — a poisoned KV page / fp2fx8 scale row surfaces here before the
+        # slot ever decodes, and the quarantine ladder takes it
+        finite = np.asarray(jnp.isfinite(last).all(-1))
+        bad = [s for s in rows if not finite[s]]
+        for s in bad:
+            self._quarantine(s, now, where="prefill")
+        fin = [s for s in rows if rem[s] <= width and s not in bad]
         if fin:
             tok0 = np.asarray(self._first_token(last), np.int32)
             for s in fin:
                 self._finish_prefill(s, int(tok0[s]), now)
         self.stats["peak_active"] = max(self.stats["peak_active"],
                                         int(self.active.sum()))
+        self._audit_check()
 
     def _finish_prefill(self, s: int, tok0: int, now: float) -> None:
         """Slot ``s``'s whole prompt is cached and its first generated
@@ -695,31 +790,76 @@ class SlotPoolEngine:
         self.last_tok[s] = tok0
         self.active[s] = True
 
-    def _preempt_lowest(self) -> bool:
+    def _now(self) -> float:
+        """Seconds since run() started (0 before/outside a run)."""
+        return time.perf_counter() - self._t0 if self._t0 is not None else 0.0
+
+    def _free_slot(self, s: int) -> None:
+        """Detach slot ``s`` from its request and return its resources."""
+        self.active[s] = False
+        self.prefilling[s] = False
+        self.slot_rid[s] = None
+        self.slot_prompt[s] = None
+        if self.paged:
+            self._release_slot_pages(s)
+
+    def _fail(self, rid: int, reason: str, now: float,
+              detail: str = "") -> None:
+        """Terminate ``rid`` with a structured failure — the partial tokens
+        generated so far stay on the Completion (DESIGN.md §13)."""
+        r = self.requests[rid]
+        self.completions[rid] = Completion(
+            rid=rid, tokens=self.outputs.get(rid, []),
+            prompt_len=len(r.tokens), finished_at=now, arrival=r.arrival,
+            token_times=list(self.out_times.get(rid, [])),
+            failure=FailureInfo(reason=reason, detail=detail,
+                                retries=self.retries.get(rid, 0)))
+        self.stats["failures"] += 1
+
+    def _requeue(self, s: int, now: float) -> bool:
+        """Push slot ``s``'s request back to the queue FRONT with the
+        tokens generated so far folded into the prompt (the preemption /
+        quarantine resume path — greedy continuation is token-for-token
+        identical).  Bounded: a request requeued more than ``max_retries``
+        times fails structurally instead, converting pressure livelock
+        into a definite outcome.  The slot itself is NOT freed here."""
+        rid = self.slot_rid[s]
+        nret = self.retries.get(rid, 0) + 1
+        self.retries[rid] = nret
+        if nret > self.scfg.max_retries:
+            self._fail(rid, "retries_exhausted", now,
+                       detail=f"requeued {nret} times")
+            return False
+        orig = self.requests[rid]
+        done = self.outputs[rid]
+        toks = np.concatenate([np.asarray(orig.tokens, np.int32),
+                               np.asarray(done, np.int32)])
+        # remaining budget from the HOST trace, not the device budget
+        # mirror: a quarantined slot's garbage steps already burned device
+        # budget the request never received tokens for
+        self._queue.appendleft(Request(
+            rid=rid, tokens=toks, max_new=orig.max_new - len(done),
+            frames=orig.frames, arrival=orig.arrival,
+            deadline=orig.deadline, resume=True))
+        return True
+
+    def _preempt_latest(self) -> bool:
         """Page exhaustion mid-decode: free the latest-arrival occupied
-        slot (ties by rid) — decoding or mid-prefill —
-        and requeue its request through the normal admission path, with
-        the tokens generated so far folded into the prompt — the greedy
-        continuation is token-for-token identical."""
+        slot (ties by rid) — decoding or mid-prefill — and requeue its
+        request through the normal admission path with the tokens generated
+        so far folded into the prompt (greedy continuation is
+        token-for-token identical); a request past its retry budget fails
+        structurally instead.  Returns True if a slot was freed."""
         cands = [s for s in range(self.scfg.n_slots)
                  if self.active[s] or self.prefilling[s]]
         if not cands:
             return False
         s = max(cands, key=lambda c: (self.requests[self.slot_rid[c]].arrival,
                                       self.slot_rid[c]))
-        rid = self.slot_rid[s]
-        orig = self.requests[rid]
-        toks = np.concatenate([np.asarray(orig.tokens, np.int32),
-                               np.asarray(self.outputs[rid], np.int32)])
-        self._queue.appendleft(Request(
-            rid=rid, tokens=toks, max_new=int(self.budget[s]),
-            frames=orig.frames, arrival=orig.arrival, resume=True))
-        self.active[s] = False
-        self.prefilling[s] = False
-        self.slot_rid[s] = None
-        self.slot_prompt[s] = None
-        self._release_slot_pages(s)
+        self._requeue(s, self._now())
+        self._free_slot(s)
         self.stats["preemptions"] += 1
+        self._audit_check()
         return True
 
     def _ensure_burst_pages(self, steps: int) -> None:
@@ -748,7 +888,7 @@ class SlotPoolEngine:
                 self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                                self.pool.pages_in_use)
                 return
-            if not self._preempt_lowest():
+            if not self._preempt_latest():
                 return
 
     def _finish(self, rid: int, now: float) -> None:
@@ -760,13 +900,58 @@ class SlotPoolEngine:
 
     # -- decode --------------------------------------------------------
 
+    def _ttl_vector(self, now: float) -> np.ndarray:
+        """Per-slot decode-step allowance derived from wall-clock deadlines:
+        with a warm per-step time estimate (the straggler monitor's EMA), a
+        deadlined slot gets ``floor(remaining / est)`` steps so the burst
+        cannot overrun its deadline by up to ``decode_burst`` tokens (min 1
+        — the host-side ``_expire`` sweep catches the already-late case
+        before the burst); without an estimate, ``TTL_NONE`` and the host
+        expires between bursts."""
+        n = self.scfg.n_slots
+        ttl = np.full(n, TTL_NONE, np.int32)
+        if self._step_ema <= 0:
+            return ttl
+        for s in range(n):
+            rid = self.slot_rid[s]
+            if rid is None or not self.active[s]:
+                continue
+            d = self.requests[rid].deadline
+            if d is not None:
+                ttl[s] = int(np.clip((d - now) / self._step_ema, 1,
+                                     TTL_NONE))
+        return ttl
+
+    def _observe_burst(self, dt: float, steps: int) -> None:
+        """Feed the burst wall time to the straggler monitor (outlier
+        bursts are flagged, not folded into the EMA) and refresh the
+        per-step estimate the deadline TTL uses."""
+        if self.straggler.observe(dt):
+            self.stats["stragglers"] += 1
+        if self.straggler.ema > 0 and steps > 0:
+            self._step_ema = self.straggler.ema / steps
+
+    def _expire_slot(self, s: int, now: float) -> None:
+        """Slot ``s``'s request passed its deadline: structured ``deadline``
+        failure with the tokens generated so far; slot + pages freed."""
+        rid = self.slot_rid[s]
+        d = self.requests[rid].deadline
+        self._fail(rid, "deadline", now, detail=f"deadline {d:.3f}s")
+        self._free_slot(s)
+        self.stats["expired"] += 1
+
     def burst(self, now: float) -> None:
         """One jitted burst of ``decode_burst`` masked steps + host
         bookkeeping: append emitted tokens, finalize newly freed slots.
         Paged mode first appends the pages the burst will write (possibly
         preempting) and refreshes the device block tables.  In spec mode
         the burst is ONE speculative step: draft, verify, accept, roll
-        back."""
+        back.  Robustness (DESIGN.md §13): deadlined slots carry a TTL the
+        device decrements alongside budget; per-step finite flags come back
+        with the tokens, and a slot whose logits went non-finite keeps only
+        its finite-prefix tokens and is quarantined."""
+        if self.chaos is not None:
+            self.chaos.fire(self, "pre_burst")
         if self.spec:
             self._spec_burst(now)
             return
@@ -776,34 +961,52 @@ class SlotPoolEngine:
                 return
             self.cache["block_tables"] = jnp.asarray(self.block_tables)
         was_active = self.active.copy()
-        emits, self.cache, tok, lengths, active, budget, self.key = \
-            self._burst(self.params, self.cache,
-                        jnp.asarray(self.last_tok)[:, None],
-                        jnp.asarray(self.lengths),
-                        jnp.asarray(self.active),
-                        jnp.asarray(self.budget), self.key)
+        t_in = time.perf_counter()
+        emits, oks, self.cache, tok, lengths, active, budget, ttl_out, \
+            self.key = self._burst(
+                self.params, self.cache,
+                jnp.asarray(self.last_tok)[:, None],
+                jnp.asarray(self.lengths),
+                jnp.asarray(self.active),
+                jnp.asarray(self.budget),
+                jnp.asarray(self._ttl_vector(now)), self.key)
         emits = np.asarray(emits)                       # (steps, n_slots)
+        oks = np.asarray(oks)                           # (steps, n_slots)
+        ttl_out = np.asarray(ttl_out)
         # np.array (not asarray): jax exports read-only views, but admission
         # writes per-slot entries into these host mirrors
         self.lengths = np.array(lengths)
         self.active = np.array(active)
         self.budget = np.array(budget)
         self.last_tok = np.array(tok)[:, 0]
+        self._observe_burst(time.perf_counter() - t_in, emits.shape[0])
         self.stats["bursts"] += 1
         self.stats["burst_steps"] += emits.shape[0]
         self.stats["model_calls"] += emits.shape[0]
         self.stats["slot_steps_active"] += int((emits != PAD).sum())
         for s in np.nonzero(was_active)[0]:
-            toks = emits[:, s]
-            toks = toks[toks != PAD].tolist()
-            self.outputs[self.slot_rid[s]].extend(toks)
-            self.out_times[self.slot_rid[s]].extend([now] * len(toks))
+            col = emits[:, s]
+            bad = np.nonzero(~oks[:, s])[0]
+            # keep only the finite-prefix tokens: the first non-finite
+            # step's sample (and everything after) is garbage
+            col = col[:int(bad[0])] if bad.size else col
+            toks = col[col != PAD].tolist()
+            rid = self.slot_rid[s]
+            self.outputs[rid].extend(toks)
+            self.out_times[rid].extend([now] * len(toks))
             self.stats["tokens_emitted"] += len(toks)
+            if bad.size:
+                self._quarantine(s, now, where="burst")
+                continue
             if not self.active[s]:                      # freed on device
-                self._finish(self.slot_rid[s], now)
-                self.slot_rid[s] = None
-                if self.paged:
-                    self._release_slot_pages(s)
+                hit_eos = (self._eos is not None and toks
+                           and toks[-1] == self._eos)
+                if ttl_out[s] <= 0 and self.budget[s] > 0 and not hit_eos:
+                    self._expire_slot(s, now)           # deadline TTL
+                else:
+                    self._finish(rid, now)
+                    self._free_slot(s)
+        self._audit_check()
 
     # -- speculative decode (repro/serve/spec.py; DESIGN.md §11) --------
 
@@ -842,9 +1045,15 @@ class SlotPoolEngine:
         # a model drafter's teacher-sync/draft-loop invocations count too,
         # so tokens-per-model-call never overstates the amortization
         self.stats["model_calls"] += self.drafter.model_calls - calls0
+        if self.chaos is not None:
+            # drafter-desync fault: junk drafts are REJECTED by exact
+            # verification, so outputs are provably unchanged
+            draft, n_draft = self.chaos.corrupt_drafts(self, draft, n_draft,
+                                                       want)
 
         was_active = self.active.copy()
-        emitted, self.cache, tok, lengths, active, budget, n_acc = \
+        t_in = time.perf_counter()
+        emitted, self.cache, tok, lengths, active, budget, n_acc, ok = \
             self._spec_step(self.params, self.cache,
                             jnp.asarray(self.last_tok)[:, None],
                             jnp.asarray(draft), jnp.asarray(n_draft),
@@ -853,15 +1062,23 @@ class SlotPoolEngine:
                             jnp.asarray(self.budget))
         emitted = np.asarray(emitted)                   # (n_slots, K + 1)
         n_acc = np.asarray(n_acc)
+        ok = np.asarray(ok)                             # per-slot finite bit
         self.lengths = np.array(lengths)
         self.active = np.array(active)
         self.budget = np.array(budget)
         self.last_tok = np.array(tok)[:, 0]
+        self._observe_burst(time.perf_counter() - t_in, 1)
         self.stats["bursts"] += 1
         self.stats["burst_steps"] += 1
         self.stats["spec_steps"] += 1
         self.stats["model_calls"] += 1
         for s in np.nonzero(was_active)[0]:
+            if not ok[s]:
+                # non-finite verify logits poison every lane's argmax: no
+                # token from this step can be trusted, so emit nothing and
+                # quarantine (the finite prefix already in outputs stands)
+                self._quarantine(s, now, where="spec")
+                continue
             row = emitted[s]
             row = row[row != PAD].tolist()
             self.outputs[self.slot_rid[s]].extend(row)
@@ -873,11 +1090,10 @@ class SlotPoolEngine:
                 self.stats["slot_steps_active"] += 1
             if not self.active[s]:                      # freed on device
                 self._finish(self.slot_rid[s], now)
-                self.slot_rid[s] = None
-                if self.paged:
-                    self._release_slot_pages(s)
+                self._free_slot(s)
         if self.paged:
             self._rollback_spec_pages()
+        self._audit_check()
 
     def _rollback_spec_pages(self) -> None:
         """Un-append tail pages past each active slot's post-acceptance
@@ -897,33 +1113,261 @@ class SlotPoolEngine:
                 self.block_tables[s, len(self.slot_pages[s])] = 0
                 self.pool.decref(p)
 
+    # -- robustness: quarantine, scrub, degradation ladder (§13) --------
+
+    def _scrub_dense_slot(self, s: int) -> None:
+        """Overwrite slot ``s``'s dense cache rows with freshly initialized
+        ones — stale NaN/Inf KV would otherwise poison the slot's NEXT
+        occupant through the ``0 * NaN = NaN`` path of masked attention
+        (scores are masked with NEG_BIG, but a non-finite V row still
+        reaches the ``probs @ v`` contraction)."""
+        scfg = self.scfg
+        n = scfg.n_slots
+        if self._scatter is None:
+            self._axes = _cache_batch_axes(self.model, self.params,
+                                           scfg.max_len, scfg.cache_dtype)
+            self._scatter = build_scatter(self.model, self._axes,
+                                          scfg.max_len, scfg.cache_dtype)
+        fresh = self.model.init_cache(self.params, n, scfg.max_len,
+                                      scfg.cache_dtype)
+        self.cache = self._scatter(self.cache, fresh,
+                                   jnp.full(n, s, dtype=I32))
+
+    def _scrub_slot_pages(self, s: int) -> None:
+        """Zero slot ``s``'s EXCLUSIVE pages (refcount 1) before they go
+        back to the pool, so a poisoned row cannot leak to the page's next
+        owner.  Trie-shared prompt pages (refcount > 1) are read-only
+        replays of clean prefill writes and stay — zeroing them would
+        corrupt other requests' cached prefixes."""
+        pages = [p for p in self.slot_pages[s] if self.pool.refs[p] == 1]
+        if not pages:
+            return
+        if self._zero_pages is None:
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def zp(blocks, idx):
+                return jax.tree.map(
+                    lambda lf: lf.at[:, idx].set(jnp.zeros((), lf.dtype)),
+                    blocks)
+            self._zero_pages = zp
+        # pad to n_blocks with the null page: one compilation, and writes
+        # at page 0 land in the never-read sink
+        idx = np.full(self.n_blocks, kvpool.NULL_PAGE, np.int32)
+        idx[:len(pages)] = pages
+        self.cache["blocks"] = self._zero_pages(self.cache["blocks"],
+                                                jnp.asarray(idx))
+
+    def _quarantine(self, s: int, now: float, where: str = "") -> None:
+        """Slot ``s`` produced non-finite logits: scrub its KV, free it,
+        and walk the degradation ladder (DESIGN.md §13) — first fault:
+        requeue and recompute from the prompt + finite-prefix tokens
+        (greedy outputs unchanged); repeat fault: ONE retry on the unfused
+        fp32 dense path; still faulting: structured ``numeric_fault``.
+        Exactly the silent-corruption shape fp2fx conversion invites —
+        ``core/numerics.py`` saturates ±inf and maps NaN -> 0, so a bad
+        scale row degrades accuracy silently while the logits go bad
+        loudly; this is where the loud signal is caught."""
+        rid = self.slot_rid[s]
+        nf = self.numeric_faults.get(rid, 0) + 1
+        self.numeric_faults[rid] = nf
+        self.stats["quarantines"] += 1
+        if self.paged:
+            self._scrub_slot_pages(s)
+        else:
+            self._scrub_dense_slot(s)
+        if nf == 1:
+            self._requeue(s, now)  # may fail structurally on the retry cap
+        elif nf == 2 and self._allow_fp32_retry:
+            self._fp32_retry(rid, now)
+        else:
+            self._fail(rid, "numeric_fault", now,
+                       detail=f"non-finite logits at {where} (fault {nf})")
+        self._free_slot(s)
+        self._audit_check()
+
+    def _fp32_retry(self, rid: int, now: float) -> None:
+        """Second numeric fault for ``rid``: re-run it solo on the unfused
+        fp32 dense path — a fresh engine, fresh cache, no prefix sharing,
+        no chaos — continuing from the finite-prefix tokens already
+        emitted.  A clean retry completes the request (greedy outputs
+        identical to a fault-free run); a retry that faults again surfaces
+        a structured ``numeric_fault``."""
+        self.stats["fp32_retries"] += 1
+        orig = self.requests[rid]
+        done = list(self.outputs[rid])
+        sched = ("continuous"
+                 if self.scfg.scheduler in ("continuous", "spec")
+                 else "lockstep")
+        sub = dataclasses.replace(
+            self.scfg, cache_dtype="float32", attn_mode="unfused",
+            kv_layout="dense", prefix_cache=False, n_slots=1,
+            scheduler=sched, audit=False, max_queue=0, n_pages=0)
+        eng = SlotPoolEngine(self.model, self.params, sub)
+        eng._allow_fp32_retry = False   # the fallback never recurses
+        toks = np.concatenate([np.asarray(orig.tokens, np.int32),
+                               np.asarray(done, np.int32)])
+        rem = (orig.deadline - now) if orig.deadline is not None else None
+        comp = eng.run([Request(rid=rid, tokens=toks,
+                                max_new=orig.max_new - len(done),
+                                frames=orig.frames, deadline=rem)])[rid]
+        fin = self._now()
+        self.outputs[rid].extend(comp.tokens)
+        self.out_times[rid].extend([fin] * len(comp.tokens))
+        if comp.failure is None:
+            self._finish(rid, fin)
+        else:
+            reason = ("deadline" if comp.failure.reason == "deadline"
+                      else "numeric_fault")
+            self._fail(rid, reason, fin,
+                       detail=f"fp32 retry: {comp.failure.reason}")
+
+    # -- robustness: cancellation, deadlines, shutdown, audits (§13) ----
+
+    def cancel(self, rid: int) -> None:
+        """Request host-side cancellation of ``rid``: honored at the next
+        scheduling checkpoint (between bursts), emitting a partial
+        Completion with ``cancelled=True``."""
+        self._cancels.add(rid)
+
+    def _cancel_done(self, rid: int, now: float) -> None:
+        r = self.requests[rid]
+        self.completions[rid] = Completion(
+            rid=rid, tokens=self.outputs.get(rid, []),
+            prompt_len=len(r.tokens), finished_at=now, arrival=r.arrival,
+            token_times=list(self.out_times.get(rid, [])), cancelled=True)
+        self.stats["cancelled"] += 1
+
+    def _apply_cancels(self, now: float) -> None:
+        if not self._cancels:
+            return
+        todo, self._cancels = self._cancels, set()
+        for rid in todo:
+            if rid in self.completions or rid not in self.requests:
+                continue  # already terminal / never submitted
+            for s in range(self.scfg.n_slots):
+                if self.slot_rid[s] == rid:
+                    self._free_slot(s)
+                    break
+            self._queue = deque(r for r in self._queue if r.rid != rid)
+            self._pending = deque(r for r in self._pending if r.rid != rid)
+            self._cancel_done(rid, now)
+        self._audit_check()
+
+    def _expire(self, now: float) -> None:
+        """Host-side deadline sweep over slots and the waiting queue.  The
+        device TTL bounds mid-burst overrun; this sweep guarantees an
+        already-late request is expired at the next scheduling checkpoint
+        even when the step-time estimate is cold."""
+        for s in range(self.scfg.n_slots):
+            rid = self.slot_rid[s]
+            if rid is None:
+                continue
+            d = self.requests[rid].deadline
+            if d is not None and now >= d:
+                self._expire_slot(s, now)
+        late = [r for r in self._queue
+                if r.deadline is not None and now >= r.deadline]
+        if late:
+            gone = {r.rid for r in late}
+            self._queue = deque(r for r in self._queue if r.rid not in gone)
+            for r in late:
+                self._register(r)
+                self._fail(r.rid, "deadline", now, detail="expired in queue")
+                self.stats["expired"] += 1
+        self._audit_check()
+
+    def shutdown(self) -> dict[int, Completion]:
+        """Drain: every in-flight or queued request without a completion is
+        terminated as cancelled with its partial tokens, and all slots and
+        pages are freed — the graceful KeyboardInterrupt path
+        (launch/serve.py, examples/serve_decode.py).  Idempotent; returns
+        the completions map."""
+        now = self._now()
+        for s in range(self.scfg.n_slots):
+            rid = self.slot_rid[s]
+            if rid is not None:
+                self._free_slot(s)
+                if rid not in self.completions:
+                    self._cancel_done(rid, now)
+        for r in list(self._queue) + list(self._pending):
+            if r.rid not in self.completions:
+                self._register(r)
+                self._cancel_done(r.rid, now)
+        self._queue.clear()
+        self._pending.clear()
+        self._audit_check()
+        return self.completions
+
+    def _audit_check(self) -> None:
+        """Recompute pool/trie refcounts from live slots + trie edges and
+        cross-check the free list (``kvpool.PagePool.audit``).  Called at
+        every admission / finish / preemption / quarantine / expiry
+        checkpoint when ``ServeConfig.audit`` is on, so bookkeeping drift
+        surfaces AT the mutation that caused it, not requests later.  The
+        chaos harness's squeezed pages ride along as extra holders."""
+        if not self.scfg.audit or not self.paged:
+            return
+        self.stats["audits"] += 1
+        for s in range(self.scfg.n_slots):
+            if self.slot_rid[s] is None and self.slot_pages[s]:
+                raise kvpool.AuditError(
+                    f"freed slot {s} still holds pages {self.slot_pages[s]}")
+        self.pool.audit(list(self.slot_pages) + list(self._extra_holders),
+                        self.trie)
+
     # -- the serving loop ----------------------------------------------
 
     def run(self, requests: list[Request]) -> dict[int, Completion]:
-        """Serve ``requests`` (sorted by ``arrival``) to completion."""
-        for r in requests:  # reject malformed requests BEFORE serving any —
-            # a mid-run failure would discard every in-flight completion
+        """Serve ``requests`` (sorted by ``arrival``) until every one has a
+        DEFINITE outcome — finished, cancelled, or structured failure
+        (DESIGN.md §13).  Malformed requests fail individually with reason
+        ``invalid`` instead of aborting the whole batch."""
+        ok_reqs = []
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self._register(r)
             if r.max_new < 1:
-                raise ValueError(f"request {r.rid}: max_new must be >= 1")
-            if len(r.tokens) + r.max_new > self.scfg.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {len(r.tokens)} + max_new "
-                    f"{r.max_new} exceeds max_len {self.scfg.max_len}")
-        queue = self._queue = deque(sorted(requests, key=lambda r: r.arrival))
-        t0 = time.perf_counter()
+                self._fail(r.rid, "invalid", 0.0,
+                           detail=f"max_new {r.max_new} < 1")
+            elif len(r.tokens) + r.max_new > self.scfg.max_len:
+                self._fail(r.rid, "invalid", 0.0,
+                           detail=f"prompt {len(r.tokens)} + max_new "
+                                  f"{r.max_new} exceeds max_len "
+                                  f"{self.scfg.max_len}")
+            else:
+                ok_reqs.append(r)
+        self._pending = deque(ok_reqs)
+        self._queue = deque()
+        self._t0 = t0 = time.perf_counter()
         continuous = self.scfg.scheduler in ("continuous", "spec")
-        while queue or self.active.any() or self.prefilling.any():
+        while (self._pending or self._queue or self.active.any()
+               or self.prefilling.any()):
             now = time.perf_counter() - t0
+            if self.chaos is not None:
+                self.chaos.fire(self, "tick")
+            self._apply_cancels(now)
+            self._expire(now)
+            # arrivals move into the BOUNDED waiting queue: admission
+            # backpressure rejects (reason "queue_full") instead of letting
+            # the queue grow without limit; requeues from preemption /
+            # quarantine bypass this — they already held an admission
+            while self._pending and self._pending[0].arrival <= now:
+                r = self._pending.popleft()
+                if (self.scfg.max_queue
+                        and len(self._queue) >= self.scfg.max_queue):
+                    self._fail(r.rid, "queue_full", now,
+                               detail=f"{len(self._queue)} waiting")
+                    self.stats["rejected"] += 1
+                else:
+                    self._queue.append(r)
             free = sum(1 for rid in self.slot_rid if rid is None)
             busy = self.active.any() or self.prefilling.any()
             can_admit = continuous or not busy
             batch = []
-            while (can_admit and queue and len(batch) < free
-                   and queue[0].arrival <= now):
-                batch.append(queue.popleft())
+            while can_admit and self._queue and len(batch) < free:
+                batch.append(self._queue.popleft())
             if batch:
                 # page-starved admissions requeue their tail to the front
                 self.admit(batch, time.perf_counter() - t0)
+                self._audit_check()
             if self.prefilling.any():
                 # at most ONE chunk per loop iteration: a long prompt's
                 # prefill interleaves with the decode bursts below instead
@@ -931,17 +1375,21 @@ class SlotPoolEngine:
                 self._prefill_step(time.perf_counter() - t0)
             if self.active.any():
                 self.burst(time.perf_counter() - t0)
-            elif not self.prefilling.any() and queue:
+            elif (not self.prefilling.any() and not self._queue
+                    and self._pending):
                 # idle: wait for the next arrival
                 now = time.perf_counter() - t0
-                time.sleep(max(0.0, min(queue[0].arrival - now, 0.01)))
+                time.sleep(max(0.0, min(
+                    self._pending[0].arrival - now, 0.01)))
         return self.completions
 
 
 def serve(model, params, requests: list[Request], scfg: ServeConfig,
-          key=None, draft=None) -> dict[int, Completion]:
+          key=None, draft=None, chaos=None) -> dict[int, Completion]:
     """One-shot entry: build a slot-pool engine, serve, return completions.
-    ``draft``: optional (model, params) pair for ``spec_mode="model"``."""
-    eng = SlotPoolEngine(model, params, scfg, key=key, draft=draft)
+    ``draft``: optional (model, params) pair for ``spec_mode="model"``;
+    ``chaos``: optional ``repro.serve.chaos.ChaosMonkey`` fault injector."""
+    eng = SlotPoolEngine(model, params, scfg, key=key, draft=draft,
+                         chaos=chaos)
     eng.run(requests)
     return eng.completions

@@ -264,7 +264,11 @@ _SPEC_CACHE: dict = {}
 def build_spec_step(model, scfg: ServeConfig, k: int):
     """Jit'd (params, cache, last_tok (B,1), draft (B,k), n_draft (B,),
     lengths (B,), active (B,), budget (B,)) -> (emitted (B, k+1)
-    PAD-padded, cache, last_tok, lengths, active, budget, n_acc (B,)).
+    PAD-padded, cache, last_tok, lengths, active, budget, n_acc (B,),
+    ok (B,)).  ``ok`` is the numeric-health bit the robustness layer keys
+    on (DESIGN.md §13): False where any VALID verify lane of an active slot
+    produced non-finite logits — the scheduler discards that slot's step
+    and quarantines it (idle slots and padding lanes report True).
 
     One ``model.prefill_chunk`` call scores ``[last_tok, draft_1..k]``: lane
     ``j``'s argmax is the token sequential greedy decode would emit after
@@ -295,6 +299,8 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
                                             write_mask=active)
         greedy = jnp.argmax(logits, -1).astype(I32)                # (B, S)
         lane = jnp.arange(S, dtype=I32)[None]
+        lane_ok = jnp.isfinite(logits).all(-1)                     # (B, S)
+        ok = (lane_ok | (lane >= n_valid[:, None])).all(1) | ~active
         dmask = jnp.arange(k, dtype=I32)[None] < n_draft[:, None]
         match = (draft == greedy[:, :-1]) & dmask
         n_acc = jnp.sum(jnp.cumprod(match.astype(I32), axis=1), axis=1)
@@ -314,7 +320,7 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
         lengths = lengths + n_emit
         budget = budget - n_emit
         active = active & (budget > 0) & ~hit_eos
-        return emitted, cache, last_tok, lengths, active, budget, n_acc
+        return emitted, cache, last_tok, lengths, active, budget, n_acc, ok
 
     return engine._cache_put(_SPEC_CACHE, ck, step)
 

@@ -1,0 +1,395 @@
+"""Serving robustness layer (DESIGN.md §13): deadlines, cancellation,
+bounded queues/retries, numeric-health degradation, pool/trie audits, and
+the seeded fault-injection harness.
+
+The contract under test:
+  * a deadline-expired request fails with reason ``deadline`` and frees its
+    slot and pages within one burst (device TTL) or at the next scheduling
+    checkpoint (host sweep) — never hangs;
+  * admission backpressure rejects with reason ``queue_full`` once the
+    bounded queue is full, without touching the rest of the batch;
+  * host ``cancel(rid)`` lands between bursts: a partial Completion with
+    ``cancelled=True`` whose tokens are a prefix of the solo run;
+  * NaN/Inf KV poison is quarantined to exactly the faulted slot and the
+    degradation ladder recovers: requeue-and-recompute first (greedy
+    outputs token-identical to fault-free), one unfused-fp32 retry on a
+    repeat fault, a structured ``numeric_fault`` after that;
+  * ``max_retries`` converts requeue livelock into ``retries_exhausted``;
+  * refcount audits catch double-holds and freed-slot leaks at the
+    mutation that caused them;
+  * drafter desync is rejected by exact verification — outputs provably
+    unchanged;
+  * ``shutdown()`` drains every in-flight/queued request as a cancelled
+    partial Completion (the graceful KeyboardInterrupt path).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.serve.chaos import ChaosMonkey, FaultPlan
+from repro.serve.kvpool import AuditError, PagePool, RadixTrie
+
+
+def _setup(vocab=64, **kw):
+    from repro.configs import get_config, smoke_config
+    from repro.models import build_model
+    from repro.models.layers import unbox
+    cfg = smoke_config(get_config("qwen2-1.5b")).with_(
+        softmax_impl="hyft16", vocab=vocab, **kw)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _requests(cfg, n, rng, plen=(3, 9), max_new=(3, 9), **kw):
+    from repro.serve.scheduler import Request
+    return [Request(
+        rid=rid,
+        tokens=rng.integers(0, cfg.vocab, int(rng.integers(*plen))).astype(
+            np.int32),
+        max_new=int(rng.integers(*max_new)), **kw) for rid in range(n)]
+
+
+def _solo(model, params, req, max_len=32):
+    import jax.numpy as jnp
+    from repro.serve.engine import generate
+    out = generate(model, params, {"tokens": jnp.asarray(req.tokens)[None]},
+                   ServeConfig(max_len=max_len, cache_dtype="float32"),
+                   max_new=req.max_new)
+    return np.asarray(out)[0].tolist()
+
+
+# --------------------------------------------------------------------------
+# deadlines
+# --------------------------------------------------------------------------
+
+
+def test_deadline_expires_in_queue_and_in_slot():
+    """One slot, two requests: the occupant outlives the waiter's deadline,
+    so the waiter expires IN THE QUEUE with a structured ``deadline``
+    failure — and a deadlined occupant is expired by the host sweep —
+    while the survivor's output never changes."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    reqs = _requests(cfg, 2, rng, plen=(4, 5), max_new=(10, 11))
+    reqs[1] = type(reqs[1])(rid=1, tokens=reqs[1].tokens,
+                            max_new=reqs[1].max_new, deadline=1e-4)
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=1, decode_burst=4)
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    assert set(done) == {0, 1}
+    assert done[0].ok
+    assert done[0].tokens == _solo(model, params, reqs[0])
+    assert not done[1].ok and done[1].failure.reason == "deadline"
+    assert eng.stats["expired"] == 1
+    assert not eng.active.any() and not eng.prefilling.any()
+
+
+def test_deadline_ttl_frees_slot_and_pages_within_one_burst():
+    """Device-side TTL: with a warm per-step estimate, a deadlined slot's
+    burst allowance is floored at the deadline — the slot frees ON DEVICE
+    partway through the burst, its pages return to the pool, and the
+    completion carries the ``deadline`` failure with the tokens emitted up
+    to the cutoff."""
+    from repro.serve.scheduler import Request, SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(1)
+    req = Request(rid=0,
+                  tokens=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                  max_new=12, deadline=0.5)
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=8,
+                       kv_layout="paged", page_size=4, audit=True)
+    eng = SlotPoolEngine(model, params, scfg)
+    eng.admit([req], 0.0)
+    eng._prefill_step(0.0)
+    assert eng.active.any()
+    # warm step estimate of 1 s/step: remaining 0.5s -> TTL clips to 1
+    eng._step_ema = 1.0
+    eng.burst(0.0)
+    comp = eng.completions[0]
+    assert comp.failure is not None and comp.failure.reason == "deadline"
+    # one admission token + one burst step before the TTL hit — the burst
+    # was cut short, not run to the full decode_burst or budget
+    assert 1 <= len(comp.tokens) <= 2
+    assert not eng.active.any()
+    assert eng.pool.pages_in_use == 0       # pages freed with the slot
+    assert eng.stats["expired"] == 1
+
+
+# --------------------------------------------------------------------------
+# backpressure / bounded retries
+# --------------------------------------------------------------------------
+
+
+def test_bounded_queue_rejects_with_queue_full():
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 4, np.random.default_rng(2), max_new=(3, 4))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=1, decode_burst=2,
+                       max_queue=1)
+    eng = SlotPoolEngine(model, params, scfg)
+    done = eng.run(reqs)
+    assert set(done) == {0, 1, 2, 3}
+    rejected = [c for c in done.values()
+                if c.failure is not None and c.failure.reason == "queue_full"]
+    served = [c for c in done.values() if c.ok]
+    # all four arrive at t=0 and drain into the queue BEFORE admission
+    # pops it: the first fills the one queue seat, the rest reject
+    assert len(rejected) == 3 and eng.stats["rejected"] == 3
+    assert len(served) == 1
+    for c in served:
+        assert c.tokens == _solo(model, params, reqs[c.rid])
+
+
+def test_retries_exhausted_is_a_definite_outcome():
+    """``max_retries=0``: the first requeue attempt (here from a forced
+    numeric quarantine) fails structurally instead of looping."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 1, np.random.default_rng(3), max_new=(8, 9))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=1, decode_burst=4,
+                       max_retries=0)
+    monkey = ChaosMonkey(FaultPlan(seed=0, nan_kv_rate=1.0, max_faults=1))
+    eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+    done = eng.run(reqs)
+    c = done[0]
+    assert c.failure is not None and c.failure.reason == "retries_exhausted"
+    assert eng.stats["quarantines"] == 1
+    assert not eng.active.any()
+
+
+# --------------------------------------------------------------------------
+# cancellation / shutdown
+# --------------------------------------------------------------------------
+
+
+def test_cancel_mid_run_returns_partial_prefix():
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(4)
+    reqs = _requests(cfg, 1, rng, plen=(4, 5), max_new=(12, 13))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=4)
+    eng = SlotPoolEngine(model, params, scfg)
+    eng.admit(reqs, 0.0)
+    eng._prefill_step(0.0)
+    eng.burst(0.0)                       # a few tokens in flight
+    eng.cancel(0)
+    eng.cancel(99)                       # unknown rid: ignored, no crash
+    eng._apply_cancels(0.0)
+    c = eng.completions[0]
+    assert c.cancelled and not c.ok
+    solo = _solo(model, params, reqs[0])
+    assert 0 < len(c.tokens) < len(solo)
+    assert c.tokens == solo[:len(c.tokens)]   # partial = prefix of solo
+    assert not eng.active.any() and eng.stats["cancelled"] == 1
+
+
+def test_shutdown_drains_everything_as_cancelled():
+    """The graceful KeyboardInterrupt path: one decoding slot + two queued
+    requests all surface as cancelled partials, pages return to the pool,
+    and a second shutdown() is a no-op."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(5)
+    reqs = _requests(cfg, 3, rng, plen=(4, 5), max_new=(10, 11))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=1, decode_burst=4,
+                       kv_layout="paged", page_size=4, prefix_cache=True,
+                       audit=True)
+    eng = SlotPoolEngine(model, params, scfg)
+    eng.admit([reqs[0]], 0.0)
+    eng._queue.extend(reqs[1:])
+    eng._prefill_step(0.0)
+    eng.burst(0.0)
+    done = eng.shutdown()
+    assert set(done) == {0, 1, 2}
+    assert all(c.cancelled for c in done.values())
+    assert len(done[0].tokens) > 0           # in-flight keeps partial work
+    assert done[1].tokens == [] and done[2].tokens == []
+    # all slot-held pages returned; only the trie's cached prefixes remain
+    assert eng.pool.pages_in_use == eng.trie.n_pages() and not eng._queue
+    assert eng.shutdown() is done or eng.shutdown() == done   # idempotent
+
+
+# --------------------------------------------------------------------------
+# numeric-health degradation ladder
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cache_dtype,layout", [
+    ("float32", "dense"),
+    ("fp2fx8", "dense"),      # poison lands in the fp32 scale rows
+    ("float32", "paged"),     # poison lands in an exclusive frontier page
+])
+def test_nan_poison_quarantines_and_recovers_greedy(cache_dtype, layout):
+    """One injected NaN: the faulted slot is quarantined (finite-prefix
+    tokens kept), requeued, and recomputed — final outputs token-identical
+    to a fault-free run for EVERY request, the poisoned one included."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 2, np.random.default_rng(6), plen=(4, 7),
+                     max_new=(8, 11))
+    kw = dict(kv_layout=layout)
+    if layout == "paged":
+        kw.update(page_size=4, prefix_cache=True, audit=True)
+    scfg = ServeConfig(max_len=32, cache_dtype=cache_dtype,
+                       scheduler="continuous", n_slots=2, decode_burst=4,
+                       **kw)
+    base = SlotPoolEngine(model, params, scfg).run(reqs)
+    monkey = ChaosMonkey(FaultPlan(seed=0, nan_kv_rate=1.0, max_faults=1))
+    eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+    done = eng.run(reqs)
+    assert eng.stats["quarantines"] == 1
+    assert len(monkey.faulted_rids) == 1
+    for r in reqs:
+        assert done[r.rid].ok
+        assert done[r.rid].tokens == base[r.rid].tokens, f"rid={r.rid}"
+    if layout == "paged":
+        # slots all drained: only the trie's cached prefixes hold pages
+        assert eng.pool.pages_in_use == eng.trie.n_pages()
+        assert eng.stats["audits"] > 0
+
+
+def test_repeat_fault_walks_to_fp32_retry():
+    """Poison the same request twice: first fault requeues, second goes to
+    the one-shot unfused-fp32 retry, which completes it — full budget, no
+    failure, and the retry is counted."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 1, np.random.default_rng(7), max_new=(6, 7))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=1, decode_burst=4)
+    monkey = ChaosMonkey(FaultPlan(seed=0, nan_kv_rate=1.0, max_faults=2))
+    eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+    done = eng.run(reqs)
+    c = done[0]
+    assert eng.stats["quarantines"] == 2
+    assert eng.stats["fp32_retries"] == 1
+    assert c.ok and len(c.tokens) == reqs[0].max_new
+    toks = np.array(c.tokens)
+    assert np.all((toks >= 0) & (toks < cfg.vocab))
+
+
+# --------------------------------------------------------------------------
+# audits catch corruption
+# --------------------------------------------------------------------------
+
+
+def test_pool_audit_catches_refcount_drift():
+    pool = PagePool(8)
+    a = pool.alloc(3)
+    pool.audit([a])                      # clean
+    pool.refs[a[0]] += 1                 # simulated double-incref drift
+    with pytest.raises(AuditError):
+        pool.audit([a])
+    pool.refs[a[0]] -= 1
+    with pytest.raises(AuditError):      # holder the books don't explain
+        pool.audit([])
+    pool.audit([a[:1], a[1:]])           # split across holders still adds up
+
+
+def test_trie_audit_catches_freed_shared_page():
+    pool = PagePool(8)
+    trie = RadixTrie(pool, 4)
+    pages = pool.alloc(2)
+    trie.insert(list(range(8)), pages)
+    trie.audit()
+    pool.audit([pages], trie)
+    pool.decref(pages[0])                # drop the slot's ref: trie holds it
+    pool.decref(pages[0])                # drop the TRIE's ref out from under
+    with pytest.raises(AuditError):
+        trie.audit()
+
+
+def test_engine_audit_catches_freed_slot_page_leak():
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    reqs = _requests(cfg, 1, np.random.default_rng(8))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler="continuous", n_slots=2, decode_burst=4,
+                       kv_layout="paged", page_size=4, audit=True)
+    eng = SlotPoolEngine(model, params, scfg)
+    eng.admit(reqs, 0.0)
+    eng._prefill_step(0.0)
+    s = next(i for i in range(scfg.n_slots) if eng.slot_pages[i])
+    eng.slot_rid[s] = None               # simulated bookkeeping bug
+    with pytest.raises(AuditError):
+        eng._audit_check()
+
+
+# --------------------------------------------------------------------------
+# drafter desync / full chaos sweeps
+# --------------------------------------------------------------------------
+
+
+def test_drafter_desync_never_changes_outputs():
+    """Junk drafts at rate 1.0: exact verification rejects them, so the
+    speculative outputs stay identical to the fault-free spec run — the
+    fault only costs acceptance."""
+    from repro.serve.scheduler import Request, SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(9)
+    reqs = []
+    for i in range(3):
+        motif = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+        reqs.append(Request(
+            rid=i,
+            tokens=np.concatenate(
+                [np.tile(motif, 3),
+                 rng.integers(0, cfg.vocab, 2).astype(np.int32)]),
+            max_new=8))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32", scheduler="spec",
+                       n_slots=2, decode_burst=4, draft_k=4)
+    base = SlotPoolEngine(model, params, scfg).run(reqs)
+    monkey = ChaosMonkey(FaultPlan(seed=0, drafter_junk_rate=1.0))
+    eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+    done = eng.run(reqs)
+    assert any(e["kind"] == "drafter_junk" for e in monkey.log)
+    for r in reqs:
+        assert done[r.rid].ok
+        assert done[r.rid].tokens == base[r.rid].tokens
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["paged", "spec"])
+def test_chaos_sweep_definite_outcomes_and_identity(mode):
+    """A mixed seeded FaultPlan over a full run: every request terminates
+    with a definite outcome, audits stay clean (the run itself would raise
+    AuditError otherwise), and every ok completion whose KV was never
+    poisoned matches the fault-free run token for token."""
+    from repro.serve.scheduler import SlotPoolEngine
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(10)
+    reqs = _requests(cfg, 8, rng, plen=(4, 10), max_new=(6, 14))
+    if mode == "paged":
+        kw = dict(kv_layout="paged", page_size=4, prefix_cache=True)
+        plan = FaultPlan(seed=1, preempt_rate=0.1, evict_storm_rate=0.1,
+                         squeeze_rate=0.1, squeeze_hold=2, nan_kv_rate=0.1,
+                         cancel_rate=0.03, max_faults=8)
+    else:
+        kw = dict(scheduler="spec", draft_k=4)
+        plan = FaultPlan(seed=1, drafter_junk_rate=0.3, preempt_rate=0.1,
+                         cancel_rate=0.03, max_faults=8)
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler=kw.pop("scheduler", "continuous"),
+                       n_slots=3, decode_burst=4, audit=True, **kw)
+    base = SlotPoolEngine(model, params, scfg).run(reqs)
+    monkey = ChaosMonkey(plan)
+    eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+    done = eng.run(reqs)
+    assert set(done) == {r.rid for r in reqs}       # definite outcomes
+    assert monkey.n_faults > 0
+    for rid, c in done.items():
+        if c.ok and rid not in monkey.faulted_rids:
+            assert c.tokens == base[rid].tokens, f"rid={rid}"
+    if mode == "paged":
+        # slots all drained: only the trie's cached prefixes hold pages
+        assert eng.pool.pages_in_use == eng.trie.n_pages()
+        assert eng.stats["audits"] > 0

@@ -470,6 +470,87 @@ def test_eviction_cannot_steal_matched_prefix_pages():
     assert isinstance(eng._queue, deque) and not eng._queue
 
 
+# --------------------------------------------------------------------------
+# audit property tests: random admit/finish/preempt/evict/cancel sequences
+# --------------------------------------------------------------------------
+
+
+def _audit_sim(ops, n_pages=24, ps=2, vocab=3):
+    """Drive PagePool + RadixTrie through a scheduler-shaped op sequence,
+    auditing after EVERY op (DESIGN.md §13).  ``ops`` is a list of
+    ``(kind, a, b)`` int triples; kind % 5 selects admit / finish /
+    preempt / evict-storm / cancel — finish, preempt, and cancel all
+    release a holder the same way (requeue is host-side bookkeeping), so
+    the pool-level invariant they share is what's under test: refcounts
+    recomputed from holders + trie edges always balance, and no page is
+    ever double-freed or leaked."""
+    pool = PagePool(n_pages)
+    trie = RadixTrie(pool, ps)
+    holders: list = []
+    for kind, a, b in ops:
+        k = kind % 5
+        if k == 0:                        # admit: match, pin, alloc, publish
+            n_tok = ps * (1 + a % 4) + b % ps
+            toks = [(a * 7 + b * 3 + j) % vocab for j in range(n_tok)]
+            matched, _ = trie.match(toks)
+            # pin the match BEFORE any allocation-triggered eviction can
+            # run — the ordering test_eviction_cannot_steal... guards
+            for p in matched:
+                pool.incref(p)
+            nb_need = -(-n_tok // ps) - len(matched)
+            tail = pool.alloc(nb_need) if nb_need > 0 else []
+            if tail is None:
+                trie.evict(nb_need)       # pressure path
+                tail = pool.alloc(nb_need)
+            if tail is None:              # admission deferred: unwind pins
+                for p in matched:
+                    pool.decref(p)
+            else:
+                pages = matched + tail
+                holders.append(pages)
+                nfull = n_tok // ps
+                if nfull:
+                    trie.insert(toks[:nfull * ps], pages[:nfull])
+        elif k == 3:                      # eviction storm
+            trie.evict(1 + a % 4)
+        elif holders:                     # finish / preempt / cancel
+            for p in holders.pop(a % len(holders)):
+                pool.decref(p)
+        pool.audit(holders, trie)
+        trie.audit()
+    for pages in holders:                 # drain: everything must come back
+        for p in pages:
+            pool.decref(p)
+    pool.audit([], trie)
+    trie.evict(1 << 30)
+    assert pool.free_pages == n_pages
+
+
+def test_audit_random_ops_seeded():
+    """Seeded fallback for environments without hypothesis: 8 random
+    40-op admit/finish/preempt/evict/cancel sequences, audits clean after
+    every op and all pages recovered at drain."""
+    rng = np.random.default_rng(9)
+    for _ in range(8):
+        ops = [tuple(int(x) for x in rng.integers(0, 64, 3))
+               for _ in range(40)]
+        _audit_sim(ops)
+
+
+def test_audit_random_ops_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 63), st.integers(0, 63),
+                              st.integers(0, 63)), max_size=60))
+    def check(ops):
+        _audit_sim(ops)
+
+    check()
+
+
 def test_paged_config_validation():
     from repro.serve.scheduler import SlotPoolEngine
     cfg, model, params = _setup()

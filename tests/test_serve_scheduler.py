@@ -203,20 +203,28 @@ def test_moe_pool_runs_valid():
         assert np.all((toks >= 0) & (toks < cfg.vocab))
 
 
-def test_malformed_requests_rejected_up_front():
-    """max_new < 1 and oversized prompt+budget raise BEFORE any serving."""
+def test_malformed_requests_fail_individually():
+    """max_new < 1 and oversized prompt+budget get a structured ``invalid``
+    failure each — the rest of the batch serves normally instead of the
+    whole run() aborting (DESIGN.md §13)."""
     from repro.serve.scheduler import Request, SlotPoolEngine
     cfg, model, params = _setup()
     scfg = ServeConfig(max_len=16, cache_dtype="float32",
                        scheduler="continuous", n_slots=2)
-    for bad in (Request(rid=0, tokens=np.arange(4, dtype=np.int32),
-                        max_new=0),
-                Request(rid=0, tokens=np.arange(10, dtype=np.int32),
-                        max_new=10)):
-        eng = SlotPoolEngine(model, params, scfg)
-        with pytest.raises(ValueError):
-            eng.run([bad])
-        assert eng.stats["admitted"] == 0
+    eng = SlotPoolEngine(model, params, scfg)
+    comps = eng.run([
+        Request(rid=0, tokens=np.arange(4, dtype=np.int32), max_new=0),
+        Request(rid=1, tokens=np.arange(10, dtype=np.int32), max_new=10),
+        Request(rid=2, tokens=np.arange(4, dtype=np.int32), max_new=3),
+    ])
+    assert set(comps) == {0, 1, 2}
+    for rid in (0, 1):
+        assert comps[rid].failure is not None
+        assert comps[rid].failure.reason == "invalid"
+        assert comps[rid].tokens == []
+        assert not comps[rid].ok
+    assert comps[2].ok and len(comps[2].tokens) == 3
+    assert eng.stats["admitted"] == 1 and eng.stats["failures"] == 2
 
 
 def test_fp2fx8_slot_pool_parity():
