@@ -1,0 +1,16 @@
+"""Static analysis & invariant checks (DESIGN.md #14).
+
+Four passes, each returning ``list[Finding]`` from its ``run()``:
+
+- ``jaxpr_audit``  -- format-flow auditor over the real executables
+- ``pallas_check`` -- BlockSpec tile bounds / divisibility / ref dtypes
+- ``retrace``      -- steady-state serving compiles nothing new
+- ``lint``         -- AST rules over src/ and scripts/
+
+``scripts/check.py`` drives all four; CI fails on any finding.
+"""
+from repro.analysis.common import Finding
+from repro.analysis.retrace import RetraceError, RetraceGuard
+
+__all__ = ["Finding", "RetraceError", "RetraceGuard",
+           "jaxpr_audit", "pallas_check", "retrace", "lint"]

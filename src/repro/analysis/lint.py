@@ -1,0 +1,338 @@
+"""Repo lint: AST rules for traced-code hygiene, specific to this codebase.
+
+The rules run over every function the repo traces -- ``@jax.jit`` /
+``functools.partial(jax.jit, ...)`` decorated functions, ``jax.jit(fn)``
+call sites (lambda or named), and Pallas kernel bodies (functions passed to
+``pl.pallas_call``, where positional params are refs and keyword-only params
+are static by this repo's convention):
+
+``traced-bool``     Python ``if``/``while``/``assert``/``bool()`` on a traced
+                    value -- a trace-time error at best, a silently baked-in
+                    constant at worst.  Static tests (``.shape``/``.ndim``/
+                    ``.dtype``, ``len()``, ``is None``, ``isinstance``,
+                    closed-over config) are exempt.
+``host-call``       ``float()``/``int()``/``.item()``/``.tolist()`` or a
+                    ``np.``/``numpy.`` call applied to traced values inside
+                    traced code -- a host sync per call.
+``prng.constant-seed``  ``jax.random.PRNGKey(<literal>)`` inside traced code:
+                    a fresh constant key per trace means the same stream on
+                    every invocation; keys must be threaded in.
+``cache.not-donated``   a jit whose wrapped function takes a ``cache``/
+                    ``pool`` positional arg must donate it
+                    (``donate_argnums``/``donate_argnames``), or every call
+                    copies the whole KV buffer.
+
+Per-line waiver: a trailing ``# lint: allow(<rule>)`` comment suppresses
+that rule on that line (cite the DESIGN.md #14 reason next to it).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.common import Finding
+
+CACHE_PARAM_NAMES = frozenset({"cache", "pool", "kv_cache", "paged_cache"})
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding",
+                           "aval", "itemsize"})
+_STATIC_CALLS = frozenset({"len", "isinstance", "hasattr", "getattr", "type",
+                           "issubclass", "callable"})
+
+
+# -- decorator / call-site classification -----------------------------------
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'jax.jit' for Attribute chains, 'jit' for bare Names."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit(node: ast.AST) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return _dotted(node) in ("functools.partial", "partial")
+
+
+def _const_strs(node: ast.AST) -> set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return set()
+
+
+def _const_ints(node: ast.AST) -> set[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)}
+    return set()
+
+
+def _jit_spec(dec: ast.AST) -> dict | None:
+    """Classify a decorator / call-head as a jit wrapper.
+
+    Returns {static_names, static_nums, donate_nums, donate_names, donates}
+    or None if the node is not a jit form.
+    """
+    if _is_jit(dec):
+        return dict(static_names=set(), static_nums=set(),
+                    donate_nums=set(), donate_names=set())
+    if isinstance(dec, ast.Call) and (_is_jit(dec.func) or (
+            _is_partial(dec.func) and dec.args and _is_jit(dec.args[0]))):
+        kw = {k.arg: k.value for k in dec.keywords if k.arg}
+        empty = ast.Tuple([], None)
+        dn, dm = kw.get("donate_argnums", empty), kw.get("donate_argnames",
+                                                         empty)
+        # a donate kwarg that isn't a literal (e.g. ``(1,) if opts.donate
+        # else ()``) is an explicit, condition-dependent decision -- the
+        # dataflow-free lint must not second-guess it
+        dynamic = any(not isinstance(v, (ast.Tuple, ast.List, ast.Constant))
+                      for v in (dn, dm))
+        return dict(
+            static_names=_const_strs(kw.get("static_argnames", empty)),
+            static_nums=_const_ints(kw.get("static_argnums", empty)),
+            donate_nums=_const_ints(dn),
+            donate_names=_const_strs(dm),
+            donate_dynamic=dynamic,
+        )
+    return None
+
+
+def _positional_params(args: ast.arguments) -> list[str]:
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+# -- expression classification ----------------------------------------------
+
+
+def _has_dynamic(node: ast.AST, traced: frozenset[str]) -> bool:
+    """True if the expression can depend on a traced runtime VALUE.
+
+    Purely syntactic: a traced Name is dynamic unless it only feeds a
+    statically-known projection (``.shape``, ``len()``, ``is None``, ...).
+    Locals derived from traced values are not tracked (no dataflow) -- the
+    lint under-approximates rather than false-positives.
+    """
+    if isinstance(node, ast.Name):
+        return node.id in traced
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _STATIC_CALLS:
+            return False
+    if isinstance(node, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+        return False
+    return any(_has_dynamic(c, traced) for c in ast.iter_child_nodes(node))
+
+
+# -- per-function rule walker -----------------------------------------------
+
+
+class _FnChecker(ast.NodeVisitor):
+    def __init__(self, traced: frozenset[str], filename: str,
+                 waived, out: list[Finding]):
+        self.traced = traced
+        self.filename = filename
+        self.waived = waived
+        self.out = out
+
+    def _emit(self, rule: str, node: ast.AST, detail: str) -> None:
+        if not self.waived(rule, node.lineno):
+            self.out.append(Finding(
+                "lint", rule, f"{self.filename}:{node.lineno}", detail))
+
+    def _check_test(self, node: ast.AST, kind: str) -> None:
+        if _has_dynamic(node, self.traced):
+            self._emit("traced-bool", node,
+                       f"`{kind}` on a traced value forces a Python bool at "
+                       f"trace time; use lax.cond/jnp.where or a static test")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_test(node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_test(node.test, "while")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._check_test(node.test, "assert")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_test(node.test, "x if c else y")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id == "bool" and any(
+                _has_dynamic(a, self.traced) for a in node.args):
+            self._emit("traced-bool", node, "`bool()` on a traced value")
+        elif isinstance(fn, ast.Name) and fn.id in ("float", "int") and any(
+                _has_dynamic(a, self.traced) for a in node.args):
+            self._emit("host-call", node,
+                       f"`{fn.id}()` on a traced value syncs to host")
+        elif isinstance(fn, ast.Attribute):
+            if fn.attr in ("item", "tolist") and \
+                    _has_dynamic(fn.value, self.traced):
+                self._emit("host-call", node,
+                           f"`.{fn.attr}()` on a traced value syncs to host")
+            else:
+                root = fn.value
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if isinstance(root, ast.Name) and root.id in ("np", "numpy") \
+                        and any(_has_dynamic(a, self.traced)
+                                for a in node.args):
+                    self._emit("host-call", node,
+                               f"numpy call `{_dotted(fn)}` on traced values "
+                               f"inside traced code")
+            if _dotted(fn) in ("jax.random.PRNGKey", "random.PRNGKey") and \
+                    node.args and isinstance(node.args[0], ast.Constant):
+                self._emit("prng.constant-seed", node,
+                           "constant PRNGKey inside traced code reuses the "
+                           "same stream every call; thread the key in")
+        self.generic_visit(node)
+
+
+# -- module analysis --------------------------------------------------------
+
+
+class _ModuleLinter:
+    def __init__(self, src: str, filename: str):
+        self.tree = ast.parse(src, filename=filename)
+        self.filename = filename
+        self.lines = src.splitlines()
+        self.findings: list[Finding] = []
+        self.defs: dict[str, ast.FunctionDef] = {}
+        for n in ast.walk(self.tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(n.name, n)
+
+    def waived(self, rule: str, lineno: int) -> bool:
+        if 1 <= lineno <= len(self.lines):
+            line = self.lines[lineno - 1]
+            return f"lint: allow({rule})" in line or \
+                "lint: allow(all)" in line
+        return False
+
+    def _traced_params(self, args: ast.arguments, spec: dict) -> frozenset[str]:
+        pos = _positional_params(args)
+        traced = {p for i, p in enumerate(pos)
+                  if p not in spec["static_names"]
+                  and i not in spec["static_nums"] and p != "self"}
+        if args.vararg is not None:
+            traced.add(args.vararg.arg)
+        return frozenset(traced)
+
+    def _check_donation(self, args: ast.arguments, spec: dict,
+                        node: ast.AST, label: str) -> None:
+        if spec.get("donate_dynamic"):
+            return
+        pos = _positional_params(args)
+        for i, p in enumerate(pos):
+            if p in CACHE_PARAM_NAMES and i not in spec["donate_nums"] \
+                    and p not in spec["donate_names"]:
+                if not self.waived("cache.not-donated", node.lineno):
+                    self.findings.append(Finding(
+                        "lint", "cache.not-donated",
+                        f"{self.filename}:{node.lineno}",
+                        f"{label}: jit threads `{p}` (positional arg {i}) "
+                        f"without donating it -- every call copies the "
+                        f"buffer"))
+
+    def _lint_traced_fn(self, body_node: ast.AST,
+                        traced: frozenset[str]) -> None:
+        checker = _FnChecker(traced, self.filename, self.waived,
+                             self.findings)
+        for stmt in (body_node.body if isinstance(body_node.body, list)
+                     else [body_node.body]):
+            checker.visit(stmt)
+
+    def run(self) -> list[Finding]:
+        kernel_names = set()
+        for n in ast.walk(self.tree):
+            if isinstance(n, ast.Call) and (
+                    _dotted(n.func) in ("pl.pallas_call", "pallas_call")):
+                head = n.args[0] if n.args else None
+                if isinstance(head, ast.Call) and _is_partial(head.func) \
+                        and head.args:
+                    head = head.args[0]
+                if isinstance(head, ast.Name):
+                    kernel_names.add(head.id)
+
+        for n in ast.walk(self.tree):
+            # decorated defs
+            if isinstance(n, ast.FunctionDef):
+                for dec in n.decorator_list:
+                    spec = _jit_spec(dec)
+                    if spec is not None:
+                        self._check_donation(n.args, spec, n,
+                                             f"def {n.name}")
+                        self._lint_traced_fn(
+                            n, self._traced_params(n.args, spec))
+                        break
+                if n.name in kernel_names:
+                    spec = dict(static_names=set(), static_nums=set(),
+                                donate_nums=set(), donate_names=set())
+                    self._lint_traced_fn(n, self._traced_params(n.args, spec))
+            # jax.jit(fn_or_lambda, ...) call sites
+            if isinstance(n, ast.Call):
+                spec = _jit_spec(n)
+                if spec is None or not n.args:
+                    continue
+                target = n.args[0]
+                if isinstance(target, ast.Lambda):
+                    self._check_donation(target.args, spec, n, "jit(lambda)")
+                    self._lint_traced_fn(
+                        target, self._traced_params(target.args, spec))
+                elif isinstance(target, ast.Name) and target.id in self.defs:
+                    d = self.defs[target.id]
+                    self._check_donation(d.args, spec, n,
+                                         f"jit({target.id})")
+                    self._lint_traced_fn(d, self._traced_params(d.args, spec))
+        return self.findings
+
+
+# -- public API -------------------------------------------------------------
+
+
+def lint_source(src: str, filename: str = "<snippet>") -> list[Finding]:
+    return _ModuleLinter(src, filename).run()
+
+
+def lint_file(path: str | Path) -> list[Finding]:
+    p = Path(path)
+    try:
+        return lint_source(p.read_text(), str(p))
+    except SyntaxError as e:
+        return [Finding("lint", "syntax-error", f"{p}:{e.lineno}", str(e))]
+
+
+def run(roots: list[str | Path] | None = None) -> list[Finding]:
+    """Lint the repo's traced code (``src/repro`` and ``scripts`` by
+    default; tests deliberately excluded -- fixtures seed violations)."""
+    if roots is None:
+        base = Path(__file__).resolve().parents[3]
+        roots = [base / "src" / "repro", base / "scripts"]
+    findings: list[Finding] = []
+    for root in roots:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            findings += lint_file(f)
+    return findings

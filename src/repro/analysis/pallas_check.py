@@ -1,0 +1,285 @@
+"""Pallas tile checker: prove BlockSpec index maps in-bounds over the grid.
+
+Every kernel in the registry (fused fwd, the two bwd kernels, split-K
+decode, paged decode, spec verify -- dense, fp2fx8, and paged layouts) is
+traced to a jaxpr at smoke shapes; for each ``pallas_call`` eqn the checker
+abstractly evaluates every BlockSpec index map at *every* grid point and
+proves, per dimension:
+
+``tile.out-of-bounds``  ``0 <= idx*bs`` and ``idx*bs + bs <= shape`` -- the
+                        tile lies inside the operand for all grid points.
+``tile.unaligned``      the operand dimension is a multiple of the block
+                        size (this repo's kernels pre-pad instead of
+                        masking tails, so a ragged tail is always a bug).
+``tile.bad-dtype``      ref dtypes match the declared cache format (int8
+                        raws + fp32 scales for fp2fx8; fp32 otherwise).
+
+Paged kernels gather pages through scalar-prefetched block tables; their
+index maps are evaluated under each entry's ``scalar_variants`` -- the
+all-zeros table and the all-max (``n_pages - 1``) table, the extreme points
+of the monotone gather, which bound every realizable table in between.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src import core as jcore
+from jax._src.state import discharge
+
+from repro.analysis.common import Finding, subjaxprs
+from repro.core.hyft import HYFT16
+
+F32, I32, I8 = jnp.float32, jnp.int32, jnp.int8
+
+
+@dataclasses.dataclass
+class KernelEntry:
+    """One kernel to check.
+
+    ``make`` returns ``(fn, args)`` -- a traceable callable (statics closed
+    over) and smoke-size operands.  ``scalar_variants`` are tuples of arrays
+    fed to scalar-prefetch index maps after the grid indices (empty tuple =
+    kernel has no scalar prefetch).  ``expect_dtypes`` maps *input operand
+    position* (after scalar-prefetch operands) to the dtype the declared
+    cache format requires for that ref.
+    """
+    name: str
+    make: Callable[[], tuple[Callable, tuple]]
+    scalar_variants: tuple[tuple, ...] = ((),)
+    expect_dtypes: dict[int, str] = dataclasses.field(default_factory=dict)
+
+
+def _find_pallas_eqns(jaxpr: jcore.Jaxpr) -> list[jcore.JaxprEqn]:
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+        for sub in subjaxprs(eqn):
+            out += _find_pallas_eqns(sub)
+    return out
+
+
+def _block_sizes(block_shape) -> list[int]:
+    # squeezed/mapped dims appear as non-int sentinels; they index a single
+    # element, i.e. an effective block extent of 1
+    return [int(b) if isinstance(b, (int, np.integer)) else 1
+            for b in block_shape]
+
+
+def check_entry(entry: KernelEntry) -> list[Finding]:
+    fn, args = entry.make()
+    closed = jax.make_jaxpr(fn)(*args)
+    eqns = _find_pallas_eqns(closed.jaxpr)
+    if not eqns:
+        return [Finding("pallas", "registry.no-kernel", entry.name,
+                        "entry traced to a jaxpr with no pallas_call")]
+    findings: list[Finding] = []
+    for ei, eqn in enumerate(eqns):
+        gm = eqn.params["grid_mapping"]
+        where = f"{entry.name}#call{ei}"
+        grid = tuple(gm.grid)
+        if not all(isinstance(g, (int, np.integer)) for g in grid):
+            findings.append(Finding(
+                "pallas", "tile.dynamic-grid", where,
+                f"grid {grid} is not fully static -- bounds unprovable"))
+            continue
+        n_scalar = getattr(gm, "num_index_operands", 0)
+        for variant in entry.scalar_variants:
+            if n_scalar and len(variant) != n_scalar:
+                findings.append(Finding(
+                    "pallas", "registry.bad-variant", where,
+                    f"kernel prefetches {n_scalar} scalar operand(s) but the "
+                    f"entry's variant supplies {len(variant)}"))
+                continue
+            findings += _check_mappings(gm, grid, variant, entry, where)
+            if findings and len(findings) > 64:
+                return findings  # a broken map floods; the first page suffices
+    return findings
+
+
+def _check_mappings(gm, grid, scalar_args, entry: KernelEntry,
+                    where: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for bi, bm in enumerate(gm.block_mappings):
+        # block_mappings cover blocked operands only -- scalar-prefetch
+        # operands have no BlockSpec, so ``bi`` aligns with the entry's
+        # operand positions directly
+        sds = bm.array_shape_dtype
+        shape, dtype = tuple(sds.shape), str(sds.dtype)
+        bs = _block_sizes(bm.block_shape)
+        opos = bi
+        want = entry.expect_dtypes.get(opos)
+        if want is not None and dtype != want:
+            findings.append(Finding(
+                "pallas", "tile.bad-dtype", f"{where} operand {opos}",
+                f"ref dtype {dtype} but the declared cache format requires "
+                f"{want}"))
+        for d, (sz, b) in enumerate(zip(shape, bs)):
+            if sz % b != 0:
+                findings.append(Finding(
+                    "pallas", "tile.unaligned", f"{where} operand {opos}",
+                    f"dim {d}: shape {sz} not a multiple of block {b} -- "
+                    f"this repo pre-pads, a ragged tail is unmasked"))
+        cj = bm.index_map_jaxpr
+        # scalar-prefetch operands are Refs inside the index-map jaxpr;
+        # discharging turns the `get` gathers into pure indexing so the map
+        # is evaluable on plain arrays (appends final ref values as extra
+        # outputs, sliced off below)
+        n_out = len(cj.jaxpr.outvars)
+        dis, dconsts = discharge.discharge_state(cj.jaxpr, cj.consts)
+        for point in np.ndindex(*grid):
+            idx = jcore.eval_jaxpr(dis, dconsts,
+                                   *[jnp.int32(p) for p in point],
+                                   *scalar_args)[:n_out]
+            for d, (i, b, sz) in enumerate(zip(idx, bs, shape)):
+                start = int(i) * b
+                if start < 0 or start + b > max(sz, b):
+                    findings.append(Finding(
+                        "pallas", "tile.out-of-bounds",
+                        f"{where} operand {opos}",
+                        f"grid point {tuple(point)} dim {d}: block index "
+                        f"{int(i)} * block {b} = [{start}, {start + b}) "
+                        f"outside operand extent {sz}"))
+                    break
+            else:
+                continue
+            break  # one OOB point per mapping is enough signal
+    return findings
+
+
+# -- the kernel registry ----------------------------------------------------
+
+
+def default_registry() -> list[KernelEntry]:
+    from repro.kernels.flash_attention import (
+        flash_hyft_attention, flash_hyft_decode, flash_hyft_decode_paged,
+        flash_hyft_verify)
+    from repro.kernels.hyft_softmax import (
+        hyft_softmax_bwd_kernel, hyft_softmax_fwd_kernel)
+
+    cfg = HYFT16
+    key = jax.random.PRNGKey(0)
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    g = Hq // Hkv
+
+    def rnd(shape, dtype=F32, k=0):
+        if dtype == I8:
+            return jax.random.randint(jax.random.fold_in(key, k), shape,
+                                      -127, 128, I32).astype(I8)
+        return jax.random.normal(jax.random.fold_in(key, k), shape, dtype)
+
+    entries: list[KernelEntry] = []
+
+    # ---- standalone softmax fwd/bwd (row-tiled) ----
+    entries.append(KernelEntry(
+        "softmax_fwd",
+        lambda: (lambda z: hyft_softmax_fwd_kernel(z, cfg), (rnd((24, 64)),))))
+    entries.append(KernelEntry(
+        "softmax_bwd",
+        lambda: (lambda s, dy: hyft_softmax_bwd_kernel(s, dy, cfg),
+                 (jax.nn.softmax(rnd((24, 64))), rnd((24, 64), k=1)))))
+
+    # ---- fused flash fwd + the two bwd kernels (dq and dk/dv) ----
+    def mk_flash_fwd():
+        q, k, v = rnd((B, Hq, 32, D)), rnd((B, Hkv, 32, D), k=1), \
+            rnd((B, Hkv, 32, D), k=2)
+        fn = lambda q, k, v: flash_hyft_attention(
+            q, k, v, cfg, block_q=16, block_k=16)
+        return fn, (q, k, v)
+    entries.append(KernelEntry("flash_fwd", mk_flash_fwd))
+
+    def mk_flash_bwd():
+        q, k, v = rnd((B, Hq, 32, D)), rnd((B, Hkv, 32, D), k=1), \
+            rnd((B, Hkv, 32, D), k=2)
+        fn = jax.grad(lambda q, k, v: flash_hyft_attention(
+            q, k, v, cfg, block_q=16, block_k=16).sum(), argnums=(0, 1, 2))
+        return fn, (q, k, v)
+    entries.append(KernelEntry("flash_bwd", mk_flash_bwd))
+
+    # ---- split-K decode, dense fp32 and fp2fx8 (int8 + scales) ----
+    Sk = 48  # deliberately not lane-aligned: exercises the pad path
+    def mk_splitk():
+        q, k, v = rnd((B, Hq, 1, D)), rnd((B, Hkv, Sk, D), k=1), \
+            rnd((B, Hkv, Sk, D), k=2)
+        fn = lambda q, k, v: flash_hyft_decode(q, k, v, cfg, block_k=128)
+        return fn, (q, k, v)
+    entries.append(KernelEntry("splitk_decode[float32]", mk_splitk))
+
+    def mk_splitk_q():
+        q = rnd((B, Hq, 1, D))
+        k, v = rnd((B, Hkv, Sk, D), I8, 1), rnd((B, Hkv, Sk, D), I8, 2)
+        ks, vs = rnd((B, Hkv, Sk), k=3), rnd((B, Hkv, Sk), k=4)
+        fn = lambda q, k, v, ks, vs: flash_hyft_decode(
+            q, k, v, cfg, block_k=128, k_scale=ks, v_scale=vs)
+        return fn, (q, k, v, ks, vs)
+    entries.append(KernelEntry(
+        "splitk_decode[fp2fx8]", mk_splitk_q,
+        expect_dtypes={1: "int8", 2: "int8", 3: "float32", 4: "float32"}))
+
+    # ---- paged decode: block-table gather via scalar prefetch ----
+    n_pages, ps, nb = 6, 8, 3
+    bt_variants = (
+        (jnp.zeros((B, nb), I32),),
+        (jnp.full((B, nb), n_pages - 1, I32),),
+    )
+
+    def mk_paged(qz: bool):
+        def make():
+            q = rnd((B, Hq, 1, D))
+            kp = rnd((n_pages, Hkv, ps, D), I8 if qz else F32, 1)
+            vp = rnd((n_pages, Hkv, ps, D), I8 if qz else F32, 2)
+            bt = jnp.arange(B * nb, dtype=I32).reshape(B, nb) % n_pages
+            if qz:
+                ks, vs = rnd((n_pages, Hkv, ps), k=3), \
+                    rnd((n_pages, Hkv, ps), k=4)
+                fn = lambda q, kp, vp, bt: flash_hyft_decode_paged(
+                    q, kp, vp, bt, cfg, k_scale=ks, v_scale=vs)
+            else:
+                fn = lambda q, kp, vp, bt: flash_hyft_decode_paged(
+                    q, kp, vp, bt, cfg)
+            return fn, (q, kp, vp, bt)
+        return make
+    entries.append(KernelEntry("paged_decode[float32]", mk_paged(False),
+                               scalar_variants=bt_variants))
+    entries.append(KernelEntry(
+        "paged_decode[fp2fx8]", mk_paged(True), scalar_variants=bt_variants,
+        expect_dtypes={1: "int8", 2: "int8", 3: "float32", 4: "float32"}))
+
+    # ---- spec-verify chunk kernel, dense and paged ----
+    Sq = 4
+
+    def mk_verify_dense():
+        q = rnd((B, Hq, Sq, D))
+        k, v = rnd((B, Hkv, Sk, D), k=1), rnd((B, Hkv, Sk, D), k=2)
+        mask = jnp.ones((B, Sq, Sk), F32)
+        fn = lambda q, k, v, m: flash_hyft_verify(q, k, v, m, cfg,
+                                                  block_k=128)
+        return fn, (q, k, v, mask)
+    entries.append(KernelEntry("verify[dense]", mk_verify_dense))
+
+    def mk_verify_paged():
+        q = rnd((B, Hq, Sq, D))
+        kp = rnd((n_pages, Hkv, ps, D), I8, 1)
+        vp = rnd((n_pages, Hkv, ps, D), I8, 2)
+        ks, vs = rnd((n_pages, Hkv, ps), k=3), rnd((n_pages, Hkv, ps), k=4)
+        bt = jnp.arange(B * nb, dtype=I32).reshape(B, nb) % n_pages
+        mask = jnp.ones((B, Sq, nb * ps), F32)
+        fn = lambda q, kp, vp, bt, m: flash_hyft_verify(
+            q, kp, vp, m, cfg, block_tables=bt, k_scale=ks, v_scale=vs)
+        return fn, (q, kp, vp, bt, mask)
+    entries.append(KernelEntry(
+        "verify[paged,fp2fx8]", mk_verify_paged, scalar_variants=bt_variants,
+        expect_dtypes={1: "int8", 2: "int8", 3: "float32", 4: "float32"}))
+
+    return entries
+
+
+def run(registry: list[KernelEntry] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for entry in registry if registry is not None else default_registry():
+        findings += check_entry(entry)
+    return findings

@@ -1,0 +1,151 @@
+"""Retrace guard: assert steady-state serving compiles nothing new.
+
+PR 6 made every serving executable cache-keyed on (model config, normalized
+serve config[, width/steps]) and ``prewarm()`` compile all bucket widths up
+front; this module turns that discipline into a checkable invariant.  The
+guard listens to JAX's compile logging (``jax_log_compiles``) and counts
+"Finished tracing + transforming ..." / "Finished XLA compilation of ..."
+records, so a cache-key regression (a Python float smuggled into a jit
+static, an un-normalized ServeConfig field, a shape that misses its bucket)
+fails loudly instead of silently recompiling per request.
+
+    with RetraceGuard() as g:
+        pool.admit(reqs); pool.run()
+    # raises RetraceError on exit if anything compiled
+
+``max_compiles`` > 0 whitelists a known number of cold compiles (e.g. a
+guard wrapped around a first call on purpose).
+"""
+from __future__ import annotations
+
+import logging
+import re
+
+import jax
+
+_TRACE_RE = re.compile(r"Finished tracing \+ transforming (.+?) (?:for|in)\b")
+_COMPILE_RE = re.compile(r"Finished XLA compilation of (.+?) in\b")
+
+
+class RetraceError(AssertionError):
+    """Steady-state code compiled something new."""
+
+
+class _Collector(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.traces: list[str] = []
+        self.compiles: list[str] = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        m = _TRACE_RE.search(msg)
+        if m:
+            self.traces.append(m.group(1))
+        m = _COMPILE_RE.search(msg)
+        if m:
+            self.compiles.append(m.group(1))
+
+
+class RetraceGuard:
+    """Context manager counting new traces/compiles inside its scope."""
+
+    def __init__(self, max_compiles: int = 0):
+        self.max_compiles = max_compiles
+        self._collector = _Collector()
+        self._logger = logging.getLogger("jax")
+
+    # results (inspectable mid-scope and after exit)
+    @property
+    def traces(self) -> list[str]:
+        return list(self._collector.traces)
+
+    @property
+    def compiles(self) -> list[str]:
+        return list(self._collector.compiles)
+
+    def __enter__(self) -> "RetraceGuard":
+        self._prev_flag = jax.config.jax_log_compiles
+        self._prev_level = self._logger.level
+        self._prev_propagate = self._logger.propagate
+        jax.config.update("jax_log_compiles", True)
+        # the compile-log records are emitted at WARNING when the flag is
+        # on, but pin the logger open in case a caller muted it; stop
+        # propagation so the records feed the counter, not stderr
+        if self._logger.level > logging.DEBUG:
+            self._logger.setLevel(logging.DEBUG)
+        self._logger.propagate = False
+        self._logger.addHandler(self._collector)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self._logger.removeHandler(self._collector)
+        self._logger.setLevel(self._prev_level)
+        self._logger.propagate = self._prev_propagate
+        jax.config.update("jax_log_compiles", self._prev_flag)
+        if exc_type is not None:
+            return  # don't mask the real error
+        if len(self._collector.compiles) > self.max_compiles:
+            names = ", ".join(self._collector.compiles)
+            raise RetraceError(
+                f"steady-state code triggered {len(self._collector.compiles)} "
+                f"XLA compilation(s) (allowed {self.max_compiles}): {names}")
+
+
+# -- the steady-state serving scenario --------------------------------------
+
+
+def serve_steady_state(scheduler: str = "continuous", n_requests: int = 8):
+    """Run warmup admissions, then ``n_requests`` more through the same
+    chunk buckets under a RetraceGuard.  Returns the guard (its ``compiles``
+    empty on success); raises RetraceError if steady state compiled.
+
+    The warmup batch walks every code path the guarded batch will take --
+    prewarmed executables AND the small host-side jnp ops (first-token
+    argmax, bucket padding) that also cache per shape -- so the guarded
+    batch is genuinely steady-state.
+    """
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.configs.base import ServeConfig
+    from repro.models import build_model
+    from repro.models.layers import unbox
+    from repro.serve.scheduler import Request, SlotPoolEngine
+
+    cfg = smoke_config(get_config("qwen2-1.5b")).with_(
+        softmax_impl="hyft16", vocab=64)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    scfg = ServeConfig(max_len=32, cache_dtype="float32",
+                       scheduler=scheduler, n_slots=3, decode_burst=4,
+                       prefill_chunk=4,
+                       draft_k=3 if scheduler == "spec" else 4)
+    eng = SlotPoolEngine(model, params, scfg)
+    eng.prewarm(max_prompt_len=14)
+
+    def batch(rid0: int, seed: int) -> list[Request]:
+        rng = np.random.default_rng(seed)
+        lengths = [4, 6, 9, 12, 5, 7, 10, 13][:n_requests]
+        return [Request(rid=rid0 + i,
+                        tokens=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                        max_new=3 + (i % 4))
+                for i, L in enumerate(lengths)]
+
+    eng.run(batch(0, 0))          # warmup: cold compiles land here
+    with RetraceGuard() as guard:  # 8 admissions through warm buckets
+        eng.run(batch(100, 1))
+    return guard
+
+
+def run(schedulers: tuple[str, ...] = ("continuous", "spec")):
+    """check.py entry: returns Findings (empty = no steady-state compiles)."""
+    from repro.analysis.common import Finding
+    findings = []
+    for sched in schedulers:
+        try:
+            serve_steady_state(sched)
+        except RetraceError as e:
+            findings.append(Finding("retrace", "steady-state-compile",
+                                    f"serve[{sched}]", str(e)))
+    return findings

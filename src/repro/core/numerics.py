@@ -34,8 +34,8 @@ def fp2fx(x: jax.Array, frac_bits: int, total_bits: int) -> jax.Array:
     (paper §3.1, ``Precision`` = ``frac_bits``).  +-inf saturate; NaN -> 0 is
     NOT special-cased (garbage-in behaviour matches hardware).
     """
-    lo = -(2 ** (total_bits - 1))
-    hi = 2 ** (total_bits - 1) - 1
+    lo = F32(-(2 ** (total_bits - 1)))
+    hi = F32(2 ** (total_bits - 1) - 1)
     scaled = x.astype(F32) * F32(2.0**frac_bits)
     # rint == round-half-even, the usual RTL rounding choice for converters.
     return jnp.clip(jnp.rint(scaled), lo, hi).astype(I32)
@@ -187,7 +187,10 @@ def log_div(e_a: jax.Array, m_a: jax.Array, e_b: jax.Array, m_b: jax.Array,
     """
     diff = m_a - m_b  # in (-2**mant, 2**mant)
     neg = diff < 0
-    e = e_a - e_b + jnp.where(neg, -1, 0)
+    # bool -> i32 keeps the conditional renorm weak-type-free: a Python-int
+    # where() here broadcast a weak scalar against the whole (..., D) raw
+    # tensor and materialized an extra convert in every finalize.
+    e = e_a - e_b - neg.astype(I32)
     m = jnp.where(neg, (1 << mant_bits) + diff, diff)  # in [0, 2**mant)
     return ((1 << mant_bits) + m).astype(F32) * pow2_float(e - mant_bits)
 

@@ -58,6 +58,13 @@ I32 = jnp.int32
 NEG_BIG = -3.0e38  # pre-quantization mask value; FP2FX saturates it to fx lo
 
 
+def _pad0(x, widths):
+    """``jnp.pad`` with a dtype-matched zero fill: the default Python-int
+    fill is a weak scalar that inserts a convert_element_type per pad (int8
+    KV raws included), which the format-flow auditor counts as churn."""
+    return jnp.pad(x, widths, constant_values=x.dtype.type(0))
+
+
 def hyft_finalize(acc, l, cfg: HyftConfig):
     """Hyft stage 3: log-subtract division ``acc / l`` through the DIV unit.
 
@@ -70,7 +77,7 @@ def hyft_finalize(acc, l, cfg: HyftConfig):
     sg, e_n, m_n = nm.float_fields(acc, cfg.mant_bits)
     res = nm.log_div(e_n, m_n, e_b, m_b, cfg.mant_bits)
     res = jnp.where(sg == 1, -res, res)
-    return jnp.where(acc == 0.0, 0.0, res)
+    return jnp.where(acc == F32(0), F32(0), res)
 
 
 def hyft_alpha(d_raw, cfg: HyftConfig):
@@ -112,7 +119,7 @@ def _flash_fwd_kernel(*refs, cfg: HyftConfig, sm_scale: float, causal: bool,
         ki = ik * block_k + jax.lax.broadcasted_iota(I32, z.shape, 1)
         z = jnp.where(qi >= ki, z, NEG_BIG)
     if has_mask:  # pre-FP2FX, same as the unfused path
-        z = jnp.where(mask_ref[0][None, :] > 0, z, NEG_BIG)
+        z = jnp.where(mask_ref[0][None, :] > F32(0), z, NEG_BIG)
 
     # ---- Hyft stage 1: FP2FX + (strided) block max, merged with running max
     z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
@@ -212,7 +219,7 @@ def _recompute_probs(q, k, mask_row, m_row, l_row, *, cfg, sm_scale, causal,
         ki = ki0 + jax.lax.broadcasted_iota(I32, z.shape, 1)
         z = jnp.where(qi >= ki, z, NEG_BIG)
     if mask_row is not None:
-        z = jnp.where(mask_row[None, :] > 0, z, NEG_BIG)
+        z = jnp.where(mask_row[None, :] > F32(0), z, NEG_BIG)
     z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
     e, m = nm.exp_unit(z_raw - m_row, cfg.frac_bits, cfg.mant_bits)
     e_b, m_b = nm.lod_refloat(l_row, cfg.mant_bits)
@@ -447,11 +454,11 @@ def flash_hyft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     elif pad_k:
         maskf = jnp.ones((B, Sk), F32)
     if pad_q:
-        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        q = _pad0(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
     if pad_k:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-        maskf = jnp.pad(maskf, ((0, 0), (0, pad_k)))
+        k = _pad0(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = _pad0(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        maskf = _pad0(maskf, ((0, 0), (0, pad_k)))
 
     if return_stats:  # forward-only path (sequence-parallel combine)
         o, m2, l2 = _flash_fwd_impl(
@@ -501,7 +508,7 @@ def _decode_tile(q, k, v, maskrow, cfg: HyftConfig, sm_scale: float):
     z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=F32) * sm_scale
     mrow = maskrow if maskrow.ndim == 2 else maskrow[None, :]
-    z = jnp.where(mrow > 0, z, NEG_BIG)
+    z = jnp.where(mrow > F32(0), z, NEG_BIG)
     z_raw = nm.fp2fx(z, cfg.frac_bits, cfg.total_bits)
     zsub = z_raw[:, :: cfg.step] if cfg.step > 1 else z_raw
     m_loc = jnp.max(zsub, axis=-1, keepdims=True)
@@ -579,18 +586,18 @@ def flash_hyft_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     maskf = (kv_len_mask.astype(F32) if kv_len_mask is not None
              else jnp.ones((B, Sk), F32))
     if pad_k:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-        maskf = jnp.pad(maskf, ((0, 0), (0, pad_k)))
+        k = _pad0(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = _pad0(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        maskf = _pad0(maskf, ((0, 0), (0, pad_k)))
         if k_scale is not None:
-            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad_k)))
-            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad_k)))
+            k_scale = _pad0(k_scale, ((0, 0), (0, 0), (0, pad_k)))
+            v_scale = _pad0(v_scale, ((0, 0), (0, 0), (0, pad_k)))
     Skp = Sk + pad_k
     ns = Skp // bk
     gp = -(-g // 8) * 8  # sublane-aligned group rows
 
     q3 = q[:, :, 0, :].reshape(B, Hkv, g, D)
-    q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    q3 = _pad0(q3, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
     q3 = q3.reshape(B * Hkv, gp, D)
     k3 = k.reshape(B * Hkv, Skp, D)
     v3 = v.reshape(B * Hkv, Skp, D)
@@ -708,7 +715,7 @@ def flash_hyft_decode_paged(q: jax.Array, k_pages: jax.Array,
              else jnp.ones((B, Lv), F32))
 
     q3 = q[:, :, 0, :].reshape(B, Hkv, g, D)
-    q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    q3 = _pad0(q3, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
     q3 = q3.reshape(B * Hkv, gp, D)
 
     quantized = k_scale is not None
@@ -878,7 +885,7 @@ def flash_hyft_verify(q: jax.Array, k: jax.Array, v: jax.Array,
     maskf = kv_pos_mask.astype(F32)       # (B, Sq, Lk)
 
     q3 = q.reshape(B, Hkv, g, Sq, D)
-    q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, 0), (0, sp - Sq), (0, 0)))
+    q3 = _pad0(q3, ((0, 0), (0, 0), (0, 0), (0, sp - Sq), (0, 0)))
     q3 = q3.reshape(B * Hkv, rows, D)
 
     quantized = k_scale is not None
@@ -888,7 +895,7 @@ def flash_hyft_verify(q: jax.Array, k: jax.Array, v: jax.Array,
 
         ps = k.shape[2]
         nb = block_tables.shape[1]
-        maskE = jnp.pad(maskf, ((0, 0), (0, sp - Sq), (0, 0)))  # (B, sp, Lv)
+        maskE = _pad0(maskf, ((0, 0), (0, sp - Sq), (0, 0)))  # (B, sp, Lv)
         in_specs = [
             pl.BlockSpec((1, rows, D), lambda b, j, bt: (b, 0, 0)),
             pl.BlockSpec((1, 1, ps, D),
@@ -931,15 +938,15 @@ def flash_hyft_verify(q: jax.Array, k: jax.Array, v: jax.Array,
         bk = min(block_k, -(-Sk // 128) * 128)  # lane-aligned KV blocks
         pad_k = (-Sk) % bk
         if pad_k:
-            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-            maskf = jnp.pad(maskf, ((0, 0), (0, 0), (0, pad_k)))
+            k = _pad0(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            v = _pad0(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            maskf = _pad0(maskf, ((0, 0), (0, 0), (0, pad_k)))
             if quantized:
-                k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad_k)))
-                v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad_k)))
+                k_scale = _pad0(k_scale, ((0, 0), (0, 0), (0, pad_k)))
+                v_scale = _pad0(v_scale, ((0, 0), (0, 0), (0, pad_k)))
         Skp = Sk + pad_k
         ns = Skp // bk
-        maskE = jnp.pad(maskf, ((0, 0), (0, sp - Sq), (0, 0)))  # (B, sp, Skp)
+        maskE = _pad0(maskf, ((0, 0), (0, sp - Sq), (0, 0)))  # (B, sp, Skp)
         in_specs = [
             pl.BlockSpec((1, rows, D), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),

@@ -100,11 +100,13 @@ def build_serve_step(model, scfg: ServeConfig):
     """Jit'd (params, cache, tokens1, pos, key) -> (next_token, cache).
 
     Cached per (model config, serve config): repeated ``generate`` calls
-    reuse the same compiled step instead of re-jitting every time.
+    reuse the same compiled step instead of re-jitting every time.  The
+    cache is donated — the host loop rebinds it every token, so without
+    donation each step copied the entire KV cache just to append one row.
     """
     ck = (model.cfg, scfg)
     if ck not in _STEP_CACHE:
-        @jax.jit
+        @functools.partial(jax.jit, donate_argnums=(1,))
         def step(params, cache, tokens1, pos, key):
             logits, cache = model.decode_step(params, cache, tokens1, pos)
             nxt = _sample(logits[:, -1, :], key, scfg.temperature,

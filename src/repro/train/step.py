@@ -45,7 +45,8 @@ def make_step_fn(model, tcfg: TrainConfig, opt_cfg: optim.OptConfig):
 
     def step_fn(state, batch):
         params = state["params"]
-        if tcfg.microbatch and tcfg.microbatch < _batch_dim(batch):
+        # static: _batch_dim reads .shape only (DESIGN.md #14 waiver)
+        if tcfg.microbatch and tcfg.microbatch < _batch_dim(batch):  # lint: allow(traced-bool)
             n = _batch_dim(batch) // tcfg.microbatch
             micro = jax.tree.map(
                 lambda x: x.reshape((n, tcfg.microbatch) + x.shape[1:]), batch)
