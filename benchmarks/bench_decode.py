@@ -13,6 +13,12 @@ dict (``benchmarks/run.py`` and the ``__main__`` entry persist it to
         host dispatch loop vs the on-device ``lax.scan`` loop, dense vs
         fp2fx8 cache.  This measures exactly what the scanned loop exists
         for: killing the per-token Python round-trip.
+  numerics — hybrid-format telemetry (``ServeConfig.telemetry``, DESIGN.md
+        §15) from a tiny slot-pool serve, fp32 vs fp2fx8 cache: the
+        realized softmax-input exponent range pre/post max-subtraction (the
+        quantity the paper's hybrid-format argument rests on), the fp2fx8
+        KV scale histogram + int8 saturation rate, and the §14
+        format-boundary convert volume.
 
 Absolute numbers are CPU times (Pallas in interpreter mode; on TPU it is the
 compiled path) — read the relative trends.
@@ -119,13 +125,59 @@ def _e2e_section(report, max_new, batch):
     return rows
 
 
+def _numerics_section(report, batch, max_new):
+    """Serve a tiny workload with ``telemetry=True`` and report the
+    per-burst device-side numeric stats the hybrid-format design rests on.
+    The fp32 and fp2fx8 engines see the same prompts, so the z-range rows
+    are directly comparable and the fp2fx8 row adds the KV-quantization
+    telemetry (scale spread, saturation, convert volume)."""
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.configs.base import ServeConfig
+    from repro.models import build_model
+    from repro.models.layers import unbox
+    from repro.serve.scheduler import Request, SlotPoolEngine
+
+    cfg = smoke_config(get_config("olmo-1b")).with_(
+        softmax_impl="hyft16", vocab=128, n_layers=2)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 12))).astype(
+                                            np.int32),
+                    max_new=max_new, arrival=0.0) for i in range(batch)]
+    rows = {}
+    for cache_dtype in ("float32", "fp2fx8"):
+        scfg = ServeConfig(max_len=12 + max_new + 1, cache_dtype=cache_dtype,
+                           scheduler="continuous", n_slots=batch,
+                           decode_burst=4, telemetry=True)
+        eng = SlotPoolEngine(model, params, scfg)
+        eng.prewarm(max(len(r.tokens) for r in reqs))
+        eng.run(reqs)
+        s = eng.obs.numerics.summary()
+        rows[cache_dtype] = s
+        extra = (f",kv_saturation_rate={s.get('kv_saturation_rate', 0):.4f},"
+                 f"kv_scale_bins={len(s.get('kv_scale_hist', {}))}"
+                 if cache_dtype == "fp2fx8" else "")
+        report(f"bench_decode_numerics,cache={cache_dtype},"
+               f"z_max={s['z_max']:.2f},z_min={s['z_min']:.2f},"
+               f"zsub_min={s['zsub_min']:.2f},"
+               f"converts={s.get('converts', 0)}{extra}")
+    return rows
+
+
 def run(report, quick: bool = False):
-    """Run both sections; returns the machine-readable results dict."""
+    """Run all sections; returns the machine-readable results dict."""
     shapes = OP_SHAPES[1:] if quick else OP_SHAPES  # keep the Sk=2048 case
     results = {
         "op": _op_section(report, shapes, iters=3 if quick else 10),
         "e2e": _e2e_section(report, max_new=16 if quick else 32,
                             batch=2 if quick else 4),
+        "numerics": _numerics_section(report, batch=2 if quick else 4,
+                                      max_new=8 if quick else 16),
     }
     return results
 

@@ -50,13 +50,23 @@ arrival), TTFT/TBT percentiles, and mean slot occupancy; results land in
 lockstep, paged+prefix >= dense, and chunked p99 TBT < whole-prompt on
 their respective workloads).
 
+An observability section (``--trace``, DESIGN.md §15) serves traced
+workloads with the span tracer + metrics JSONL export on: it measures the
+tracer's wall-clock overhead (CI asserts < 5%), writes a Perfetto-loadable
+``TRACE_serve.json`` covering the span taxonomy, reconciles the metrics
+registry against the post-hoc ``Completion`` records, and reports the
+hybrid-format numeric telemetry (softmax exponent range, fp2fx8 scale
+histogram, int8 saturation) from a ``telemetry=True`` fp2fx8 engine under
+NaN poison — including the numeric stats attached to each quarantine.
+
 Absolute numbers are CPU times (Pallas in interpreter mode; on TPU it is
-the compiled path) — read the relative trends.  Note the FIRST engine run
-in a process pays a one-time runtime warm-up (XLA thread pools, allocator
-arenas — beyond what ``prewarm``'s executable compilation covers), so each
-section is most comparable when run standalone (``--prefix-only`` /
-``--spec-only`` / ``--chunked-only``, the CI jobs' shape); ``--merge``
-lets those standalone runs update one shared JSON.
+the compiled path) — read the relative trends.  Every engine's one-time
+warm-up (``prewarm``'s executable compilation plus first-run runtime setup:
+XLA thread pools, allocator arenas) is timed explicitly and reported as
+``warmup_s`` per engine, so the serving wall-clock numbers exclude it and
+sections stay comparable whether run standalone (``--prefix-only`` /
+``--spec-only`` / ``--chunked-only``, the CI jobs' shape) or in one sweep;
+``--merge`` lets standalone runs update one shared JSON.
 """
 from __future__ import annotations
 
@@ -134,8 +144,12 @@ def make_repetitive_workload(cfg, n, rng, motif_len, reps, tail, new,
 
 def _latency_stats(done):
     """TTFT (first token − arrival) and TBT (successive token-emission
-    gaps, pooled across requests) percentiles, in milliseconds."""
-    ttft = np.array([c.ttft for c in done.values()])
+    gaps, pooled across requests) percentiles, in milliseconds.  Requests
+    that never emitted a token (cancelled / failed before their first
+    emission) have ``ttft is None`` and are skipped."""
+    ttft = np.array([c.ttft for c in done.values() if c.ttft is not None])
+    if ttft.size == 0:
+        ttft = np.zeros(1)
     gaps = [np.diff(c.token_times) for c in done.values()
             if len(c.token_times) > 1]
     tbt = np.concatenate(gaps) if gaps else np.zeros(1)
@@ -145,15 +159,17 @@ def _latency_stats(done):
             "tbt_p99_ms": float(np.percentile(tbt, 99) * 1e3)}
 
 
-def run_engine(model, params, reqs, scfg):
+def run_engine(model, params, reqs, scfg, obs=None):
     """Serve ``reqs`` on a prewarmed engine; returns (metrics dict,
     completions dict) — callers compare completions across engines."""
     from repro.serve.scheduler import SlotPoolEngine
-    eng = SlotPoolEngine(model, params, scfg)
+    eng = SlotPoolEngine(model, params, scfg, obs=obs)
     # compile every admission/burst shape up front: admission group shapes
     # depend on wall-clock arrival timing, so an untimed warmup run would
     # not reliably cover them and a mid-run trace would pollute the timing
+    t_w = time.perf_counter()
     eng.prewarm(max(len(r.tokens) for r in reqs))
+    warmup = time.perf_counter() - t_w
     t0 = time.perf_counter()
     done = eng.run(reqs)
     wall = time.perf_counter() - t0
@@ -164,7 +180,7 @@ def run_engine(model, params, reqs, scfg):
            max(1, st["burst_steps"] * scfg.n_slots))
     out = {"scheduler": scfg.scheduler, "kv_layout": scfg.kv_layout,
            "prefill_chunk": scfg.prefill_chunk,
-           "wall_s": wall, "tokens": tokens,
+           "warmup_s": warmup, "wall_s": wall, "tokens": tokens,
            "tokens_per_s": tokens / wall,
            "p50_ms": float(np.percentile(lat, 50) * 1e3),
            "p99_ms": float(np.percentile(lat, 99) * 1e3),
@@ -212,20 +228,25 @@ def make_mixed_workload(cfg, n, rng, short, long_, frac_long, new, rate_hz):
 
 def run(report, smoke: bool = False, prefix_only: bool = False,
         spec_only: bool = False, chunked_only: bool = False,
-        chaos_only: bool = False):
+        chaos_only: bool = False, obs_only: bool = False,
+        trace_out: str = "TRACE_serve.json",
+        metrics_out: str = "METRICS_serve.jsonl"):
     """Returns the machine-readable results dict (also printed as CSV).
 
     ``prefix_only`` runs just the shared-prefix section, ``spec_only`` just
     the repetitive/speculative section, ``chunked_only`` just the mixed
-    long/short chunked-prefill section, and ``chaos_only`` just the
-    fault-injection robustness section — the paged-serve, spec-serve,
-    chunked-serve, and chaos-serve CI jobs each assert on one comparison
-    and need not pay for the others.
+    long/short chunked-prefill section, ``chaos_only`` just the
+    fault-injection robustness section, and ``obs_only`` just the
+    observability section — the CI jobs each assert on one comparison and
+    need not pay for the others.
     """
     from repro.configs.base import ServeConfig
     cfg, model, params = _build()
     if chaos_only:
         return _run_chaos(report, {}, cfg, model, params, smoke)
+    if obs_only:
+        return _run_obs(report, {}, cfg, model, params, smoke,
+                        trace_out=trace_out, metrics_out=metrics_out)
     # arrival rate is set well above the service rate so a queue builds —
     # the regime where the admission policy matters (an unsaturated pool
     # admits small groups either way and the two schedulers converge)
@@ -419,6 +440,174 @@ def _run_chunked(report, results, cfg, model, params, rng, smoke):
     return results
 
 
+def _run_obs(report, results, cfg, model, params, smoke,
+             trace_out="TRACE_serve.json",
+             metrics_out="METRICS_serve.jsonl"):
+    """Observability section (DESIGN.md §15): tracer overhead, trace span
+    coverage, metrics↔completions reconciliation, numeric telemetry.
+
+    Four measurements:
+
+      overhead — the SAME deterministic workload (every arrival at t=0, so
+          the admission sequence is wall-clock-free) served with the tracer
+          off and on, interleaved, best-of-3 fresh engines each; CI asserts
+          the traced wall is < 5% over the untraced one.
+      coverage — one shared ``Obs`` bundle (tracer + metrics JSONL export)
+          traces a paged+prefix engine under a chaos plan (forced
+          preemptions, eviction storms, pool squeezes, NaN poison) and then
+          a speculative engine, so the single ``TRACE_serve.json`` covers
+          admit / prefill_chunk / decode_burst / spec_verify / compile /
+          preempt / evict / quarantine.
+      reconciliation — per-engine (the metrics carry scheduler+family
+          labels) the registry's token counter and TTFT/TBT histograms are
+          checked against the post-hoc ``Completion`` records: counts and
+          sums must match exactly, percentiles to the sketch's ~2.5%
+          relative error.
+      numerics — a dense fp2fx8 engine with ``telemetry=True`` under a
+          NaN-poison plan: softmax-input exponent range pre/post
+          max-subtraction, KV scale histogram, int8 saturation, convert
+          volume — and every quarantine annotated with the numeric stats
+          in force when it fired.
+    """
+    import os
+
+    from repro.configs.base import ServeConfig
+    from repro.obs import Obs
+    from repro.serve.chaos import ChaosMonkey, FaultPlan
+    from repro.serve.scheduler import Request, SlotPoolEngine
+
+    if smoke:
+        n, slots, burst, plen, new = 10, 4, 4, (4, 12), (6, 16)
+    else:
+        n, slots, burst, plen, new = 24, 6, 4, (4, 16), (8, 32)
+    rng = np.random.default_rng(5)
+    reqs = [Request(
+        rid=i,
+        tokens=rng.integers(0, cfg.vocab,
+                            int(rng.integers(plen[0], plen[1] + 1))).astype(
+                                np.int32),
+        max_new=int(rng.integers(new[0], new[1] + 1)), arrival=0.0)
+        for i in range(n)]
+    max_len = plen[1] + new[1] + 1
+    base = dict(max_len=max_len, cache_dtype="float32",
+                scheduler="continuous", n_slots=slots, decode_burst=burst)
+    obs_res: dict = {"workload": {"requests": n, "n_slots": slots,
+                                  "decode_burst": burst,
+                                  "prompt_len": list(plen),
+                                  "max_new": list(new)}}
+
+    # ---- tracer overhead: off vs on, interleaved, best-of-3 -------------
+    def _timed(obs):
+        eng = SlotPoolEngine(model, params, ServeConfig(**base), obs=obs)
+        eng.prewarm(max(len(r.tokens) for r in reqs))
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        return time.perf_counter() - t0, done
+
+    w_off, w_on = [], []
+    for _ in range(3):
+        w, _d = _timed(None)
+        w_off.append(w)
+        w, _d = _timed(Obs.enabled())
+        w_on.append(w)
+    overhead = min(w_on) / max(1e-9, min(w_off)) - 1.0
+    obs_res["overhead"] = {"wall_off_s": min(w_off), "wall_on_s": min(w_on),
+                           "frac": overhead}
+    report(f"bench_serve,obs_overhead,off_s={min(w_off):.3f},"
+           f"on_s={min(w_on):.3f},frac={overhead:+.3f}")
+
+    # ---- span coverage + metrics reconciliation (one shared bundle) -----
+    if os.path.exists(metrics_out):
+        os.remove(metrics_out)  # JSONL export appends
+    obs = Obs.enabled(metrics_path=metrics_out, snapshot_every_s=0.25)
+    prng = np.random.default_rng(6)
+    preqs = make_prefix_workload(cfg, n, 2, prng, 16, 6, new, 10000.0)
+    plan = FaultPlan(seed=21, preempt_rate=0.40, evict_storm_rate=0.20,
+                     squeeze_rate=0.20, squeeze_frac=0.5, squeeze_hold=2,
+                     nan_kv_rate=0.15, max_faults=16)
+    scfg_p = ServeConfig(max_len=16 + 6 + new[1] + 1, cache_dtype="float32",
+                         scheduler="continuous", n_slots=slots,
+                         decode_burst=burst, kv_layout="paged", page_size=8,
+                         prefix_cache=True, prefill_chunk=8, audit=True)
+    eng_p = SlotPoolEngine(model, params, scfg_p, chaos=ChaosMonkey(plan),
+                           obs=obs)
+    eng_p.prewarm(max(len(r.tokens) for r in preqs))
+    done_p = eng_p.run(preqs)
+    sreqs = make_repetitive_workload(cfg, n, np.random.default_rng(7), 6, 4,
+                                     4, new, 10000.0)
+    scfg_s = ServeConfig(max_len=6 * 4 + 4 + new[1] + 1,
+                         cache_dtype="float32", scheduler="spec", draft_k=4,
+                         n_slots=slots, decode_burst=burst)
+    eng_s = SlotPoolEngine(model, params, scfg_s, obs=obs)
+    eng_s.prewarm(max(len(r.tokens) for r in sreqs))
+    done_s = eng_s.run(sreqs)
+    obs.tracer.write(trace_out)
+    kinds = sorted(obs.tracer.span_kinds())
+    obs_res["trace"] = {"path": trace_out, "events": len(obs.tracer.events),
+                        "span_kinds": kinds}
+    report(f"bench_serve,obs_trace,events={len(obs.tracer.events)},"
+           f"kinds={'|'.join(kinds)}")
+
+    def _reconcile(scfg, done):
+        lab = dict(scheduler=scfg.scheduler, family=cfg.family)
+        m = obs.metrics
+        tok = m.find("serve.tokens_emitted", **lab).value
+        actual = sum(len(c.tokens) for c in done.values())
+        ttfts = np.array([c.ttft for c in done.values()
+                          if c.ttft is not None])
+        gaps = [np.diff(c.token_times) for c in done.values()
+                if len(c.token_times) > 1]
+        tbts = np.concatenate(gaps) if gaps else np.zeros(0)
+        out = {"metric_tokens_emitted": tok, "completion_tokens": actual,
+               "tokens_match": tok == actual}
+        for key, vals in (("ttft", ttfts), ("tbt", tbts)):
+            h = m.find(f"serve.{key}_s", **lab)
+            s = h.summary() if h is not None else {"count": 0, "sum": 0.0,
+                                                   "p50": 0.0}
+            out[key] = {
+                "metric_count": s["count"], "posthoc_count": int(vals.size),
+                "metric_sum_s": s["sum"],
+                "posthoc_sum_s": float(vals.sum()),
+                "metric_p50_s": s["p50"],
+                "posthoc_p50_s": float(np.percentile(vals, 50))
+                if vals.size else 0.0}
+        return out
+
+    obs_res["reconcile"] = {"paged_chaos": _reconcile(scfg_p, done_p),
+                            "spec": _reconcile(scfg_s, done_s)}
+    with open(metrics_out) as f:
+        obs_res["metrics_snapshots"] = sum(1 for _ in f)
+    for name, r in obs_res["reconcile"].items():
+        report(f"bench_serve,obs_reconcile_{name},"
+               f"metric_tokens={r['metric_tokens_emitted']},"
+               f"completion_tokens={r['completion_tokens']},"
+               f"ttft_n={r['ttft']['metric_count']}/"
+               f"{r['ttft']['posthoc_count']},"
+               f"tbt_n={r['tbt']['metric_count']}/"
+               f"{r['tbt']['posthoc_count']}")
+
+    # ---- hybrid-format numeric telemetry under NaN poison ---------------
+    nplan = FaultPlan(seed=22, nan_kv_rate=0.25, max_faults=6)
+    scfg_n = ServeConfig(max_len=max_len, cache_dtype="fp2fx8",
+                         scheduler="continuous", n_slots=slots,
+                         decode_burst=burst, telemetry=True)
+    eng_n = SlotPoolEngine(model, params, scfg_n,
+                           chaos=ChaosMonkey(nplan), obs=Obs())
+    eng_n.prewarm(max(len(r.tokens) for r in reqs))
+    done_n = eng_n.run(reqs)
+    num = eng_n.obs.numerics.summary()
+    obs_res["numerics"] = num
+    obs_res["numerics"]["ok"] = sum(1 for c in done_n.values() if c.ok)
+    obs_res["numerics"]["quarantines"] = eng_n.stats["quarantines"]
+    report(f"bench_serve,obs_numerics,z_max={num.get('z_max')},"
+           f"zsub_min={num.get('zsub_min')},"
+           f"kv_saturation_rate={num.get('kv_saturation_rate', 0):.4f},"
+           f"converts={num.get('converts', 0)},"
+           f"quarantine_events={len(num.get('quarantine_events', []))}")
+    results["obs"] = obs_res
+    return results
+
+
 def _run_chaos(report, results, cfg, model, params, smoke):
     """Fault-injection robustness section (DESIGN.md §13).
 
@@ -513,10 +702,12 @@ def _run_chaos(report, results, cfg, model, params, smoke):
     def _serve(scfg, reqs, plan=None):
         monkey = ChaosMonkey(plan) if plan is not None else None
         eng = SlotPoolEngine(model, params, scfg, chaos=monkey)
+        t_w = time.perf_counter()
         eng.prewarm(max(len(r.tokens) for r in reqs))
+        warmup = time.perf_counter() - t_w
         t0 = time.perf_counter()
         done = eng.run(reqs)
-        return done, eng, monkey, time.perf_counter() - t0
+        return done, eng, monkey, time.perf_counter() - t0, warmup
 
     results["chaos"] = {
         "workload": {"requests": n, "n_slots": slots, "decode_burst": burst,
@@ -530,8 +721,8 @@ def _run_chaos(report, results, cfg, model, params, smoke):
         max_len = max(len(r.tokens) + r.max_new for r in reqs) + 1
         scfg = ServeConfig(max_len=max_len, n_slots=slots,
                            decode_burst=burst, audit=True, **kw)
-        base_done, _, _, _ = _serve(scfg, reqs)
-        done, eng, monkey, wall = _serve(scfg, reqs, plan)
+        base_done, _, _, _, _ = _serve(scfg, reqs)
+        done, eng, monkey, wall, warmup = _serve(scfg, reqs, plan)
         rids = {r.rid for r in reqs}
         definite = set(done) == rids
         oks = {rid: c for rid, c in done.items() if c.ok}
@@ -553,7 +744,8 @@ def _run_chaos(report, results, cfg, model, params, smoke):
              "faults": monkey.summary(), "audits": st["audits"],
              "quarantines": st["quarantines"],
              "fp32_retries": st["fp32_retries"],
-             "preemptions": st["preemptions"], "wall_s": wall}
+             "preemptions": st["preemptions"], "wall_s": wall,
+             "warmup_s": warmup}
         results["chaos"]["configs"][name] = r
         report(f"bench_serve,chaos_{name},ok={len(oks)}/{n},"
                f"cancelled={r['cancelled']},failed={r['failed']},"
@@ -584,6 +776,14 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="run only the fault-injection robustness section "
                          "(seeded FaultPlan per serving config, audits on)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run only the observability section: tracer "
+                         "overhead, Perfetto trace + metrics JSONL export, "
+                         "metrics reconciliation, fp2fx8 numeric telemetry")
+    ap.add_argument("--trace-out", default="TRACE_serve.json",
+                    help="Chrome trace-event JSON output path (--trace)")
+    ap.add_argument("--metrics-out", default="METRICS_serve.jsonl",
+                    help="metrics JSONL snapshot output path (--trace)")
     ap.add_argument("--merge", action="store_true",
                     help="update an existing --json file in place (a "
                          "section-only run keeps the other sections' "
@@ -592,7 +792,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     res = run(print, smoke=args.smoke, prefix_only=args.prefix_only,
               spec_only=args.spec_only, chunked_only=args.chunked_only,
-              chaos_only=args.chaos)
+              chaos_only=args.chaos, obs_only=args.trace,
+              trace_out=args.trace_out, metrics_out=args.metrics_out)
     out: dict = {}
     if args.merge and os.path.exists(args.json):
         with open(args.json) as f:

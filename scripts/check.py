@@ -10,7 +10,8 @@ Passes:
              the kernel registry
   --retrace  steady-state serving (warm buckets, 8 admissions) compiles
              nothing new, for the continuous and spec schedulers
-  --lint     AST rules over src/repro and scripts/
+  --lint     AST rules over src/repro and scripts/ (traced-bool, host-call,
+             prng.constant-seed, cache.not-donated, obs.untimed-hot-path)
 
 ``--verbose`` also prints the scalar weak-convert churn tally from the
 jaxpr pass (notes, not findings: XLA folds rank-0 weak casts).

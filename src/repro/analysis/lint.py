@@ -21,6 +21,12 @@ are static by this repo's convention):
                     ``pool`` positional arg must donate it
                     (``donate_argnums``/``donate_argnames``), or every call
                     copies the whole KV buffer.
+``obs.untimed-hot-path``  a host-side ``for``/``while`` loop invoking a
+                    jitted executable (a name assigned from ``jax.jit(...)``
+                    or a ``build_*`` executable factory) outside any
+                    ``with <tracer>.span(...)`` scope -- hot loops must be
+                    observable (DESIGN.md §15); wrap the loop or the call in
+                    a span, or waive with a cited reason.
 
 Per-line waiver: a trailing ``# lint: allow(<rule>)`` comment suppresses
 that rule on that line (cite the DESIGN.md #14 reason next to it).
@@ -209,6 +215,115 @@ class _FnChecker(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+# -- obs.untimed-hot-path ---------------------------------------------------
+
+# executable factories whose RESULT is not a jitted callable (a model object,
+# a config, ...) -- calling these in a loop is not a hot-path dispatch
+_JIT_BUILDER_DENY = frozenset({"build_model"})
+
+
+def _jit_valued(node: ast.AST) -> bool:
+    """True if the expression evaluates to a jitted executable: a
+    ``jax.jit(...)`` call, a ``build_*(...)`` executable factory, or an
+    IfExp choosing between such calls."""
+    if isinstance(node, ast.IfExp):
+        return _jit_valued(node.body) or _jit_valued(node.orelse)
+    if isinstance(node, ast.Call):
+        name = _dotted(node.func)
+        if name is None:
+            return False
+        if name in ("jax.jit", "jit"):
+            return True
+        last = name.rsplit(".", 1)[-1]
+        return last.startswith("build_") and last not in _JIT_BUILDER_DENY
+    return False
+
+
+def _collect_jit_targets(tree: ast.AST) -> tuple[set[str], set[str]]:
+    """Names / attribute names assigned from jit-valued expressions anywhere
+    in the module (``step = jax.jit(f)``, ``self._burst = build_burst(...)``)."""
+    names: set[str] = set()
+    attrs: set[str] = set()
+    for n in ast.walk(tree):
+        targets: list[ast.AST] = []
+        if isinstance(n, ast.Assign) and _jit_valued(n.value):
+            targets = list(n.targets)
+        elif isinstance(n, ast.AnnAssign) and n.value is not None \
+                and _jit_valued(n.value):
+            targets = [n.target]
+        for t in targets:
+            if isinstance(t, ast.Name):
+                names.add(t.id)
+            elif isinstance(t, ast.Attribute):
+                attrs.add(t.attr)
+    return names, attrs
+
+
+class _HotPathChecker(ast.NodeVisitor):
+    """Flags calls to known jitted executables inside host loops that are
+    not lexically under a ``with <something>.span(...)`` block."""
+
+    def __init__(self, names: set[str], attrs: set[str], filename: str,
+                 waived, out: list[Finding]):
+        self.names = names
+        self.attrs = attrs
+        self.filename = filename
+        self.waived = waived
+        self.out = out
+        self._in_span = False
+        self._loop_depth = 0
+
+    # a nested def runs later, outside any enclosing span/loop
+    def visit_FunctionDef(self, node) -> None:
+        prev = (self._in_span, self._loop_depth)
+        self._in_span, self._loop_depth = False, 0
+        self.generic_visit(node)
+        self._in_span, self._loop_depth = prev
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    def visit_With(self, node: ast.With) -> None:
+        spanned = any(
+            isinstance(it.context_expr, ast.Call)
+            and isinstance(it.context_expr.func, ast.Attribute)
+            and it.context_expr.func.attr == "span"
+            for it in node.items)
+        if spanned:
+            prev, self._in_span = self._in_span, True
+            self.generic_visit(node)
+            self._in_span = prev
+        else:
+            self.generic_visit(node)
+
+    def _visit_loop(self, node) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+    visit_AsyncFor = _visit_loop
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._loop_depth and not self._in_span:
+            fn = node.func
+            hit = None
+            if isinstance(fn, ast.Name) and fn.id in self.names:
+                hit = fn.id
+            elif isinstance(fn, ast.Attribute) and fn.attr in self.attrs:
+                hit = fn.attr
+            if hit is not None and not self.waived("obs.untimed-hot-path",
+                                                   node.lineno):
+                self.out.append(Finding(
+                    "lint", "obs.untimed-hot-path",
+                    f"{self.filename}:{node.lineno}",
+                    f"host loop calls jitted executable `{hit}` outside any "
+                    f"tracer span; wrap it in `with tracer.span(...)` "
+                    f"(DESIGN.md §15) or waive with a reason"))
+        self.generic_visit(node)
+
+
 # -- module analysis --------------------------------------------------------
 
 
@@ -264,6 +379,10 @@ class _ModuleLinter:
             checker.visit(stmt)
 
     def run(self) -> list[Finding]:
+        jit_names, jit_attrs = _collect_jit_targets(self.tree)
+        if jit_names or jit_attrs:
+            _HotPathChecker(jit_names, jit_attrs, self.filename,
+                            self.waived, self.findings).visit(self.tree)
         kernel_names = set()
         for n in ast.walk(self.tree):
             if isinstance(n, ast.Call) and (

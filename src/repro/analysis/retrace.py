@@ -3,11 +3,13 @@
 PR 6 made every serving executable cache-keyed on (model config, normalized
 serve config[, width/steps]) and ``prewarm()`` compile all bucket widths up
 front; this module turns that discipline into a checkable invariant.  The
-guard listens to JAX's compile logging (``jax_log_compiles``) and counts
-"Finished tracing + transforming ..." / "Finished XLA compilation of ..."
-records, so a cache-key regression (a Python float smuggled into a jit
-static, an un-normalized ServeConfig field, a shape that misses its bucket)
-fails loudly instead of silently recompiling per request.
+compile-log listener itself (regexes + ``jax_log_compiles`` logging
+plumbing) lives in ``repro.obs.trace`` — the SAME machinery the runtime
+tracer uses to stamp "compile" spans into a serve trace
+(``compile_watch``); this module layers the budget/steady-state policy on
+top, so a cache-key regression (a Python float smuggled into a jit static,
+an un-normalized ServeConfig field, a shape that misses its bucket) fails
+loudly instead of silently recompiling per request.
 
     with RetraceGuard() as g:
         pool.admit(reqs); pool.run()
@@ -18,33 +20,15 @@ guard wrapped around a first call on purpose).
 """
 from __future__ import annotations
 
-import logging
-import re
+from repro.obs.trace import COMPILE_RE, TRACE_RE, compile_watch
 
-import jax
-
-_TRACE_RE = re.compile(r"Finished tracing \+ transforming (.+?) (?:for|in)\b")
-_COMPILE_RE = re.compile(r"Finished XLA compilation of (.+?) in\b")
+# back-compat aliases (pre-obs name for the shared regexes)
+_TRACE_RE = TRACE_RE
+_COMPILE_RE = COMPILE_RE
 
 
 class RetraceError(AssertionError):
     """Steady-state code compiled something new."""
-
-
-class _Collector(logging.Handler):
-    def __init__(self):
-        super().__init__(level=logging.DEBUG)
-        self.traces: list[str] = []
-        self.compiles: list[str] = []
-
-    def emit(self, record: logging.LogRecord) -> None:
-        msg = record.getMessage()
-        m = _TRACE_RE.search(msg)
-        if m:
-            self.traces.append(m.group(1))
-        m = _COMPILE_RE.search(msg)
-        if m:
-            self.compiles.append(m.group(1))
 
 
 class RetraceGuard:
@@ -52,43 +36,30 @@ class RetraceGuard:
 
     def __init__(self, max_compiles: int = 0):
         self.max_compiles = max_compiles
-        self._collector = _Collector()
-        self._logger = logging.getLogger("jax")
+        self._watch = compile_watch()
 
     # results (inspectable mid-scope and after exit)
     @property
     def traces(self) -> list[str]:
-        return list(self._collector.traces)
+        return list(self._watch.listener.traces)
 
     @property
     def compiles(self) -> list[str]:
-        return list(self._collector.compiles)
+        return list(self._watch.listener.compiles)
 
     def __enter__(self) -> "RetraceGuard":
-        self._prev_flag = jax.config.jax_log_compiles
-        self._prev_level = self._logger.level
-        self._prev_propagate = self._logger.propagate
-        jax.config.update("jax_log_compiles", True)
-        # the compile-log records are emitted at WARNING when the flag is
-        # on, but pin the logger open in case a caller muted it; stop
-        # propagation so the records feed the counter, not stderr
-        if self._logger.level > logging.DEBUG:
-            self._logger.setLevel(logging.DEBUG)
-        self._logger.propagate = False
-        self._logger.addHandler(self._collector)
+        self._watch.__enter__()
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        self._logger.removeHandler(self._collector)
-        self._logger.setLevel(self._prev_level)
-        self._logger.propagate = self._prev_propagate
-        jax.config.update("jax_log_compiles", self._prev_flag)
+        self._watch.__exit__(exc_type, exc, tb)
         if exc_type is not None:
             return  # don't mask the real error
-        if len(self._collector.compiles) > self.max_compiles:
-            names = ", ".join(self._collector.compiles)
+        compiles = self._watch.listener.compiles
+        if len(compiles) > self.max_compiles:
+            names = ", ".join(compiles)
             raise RetraceError(
-                f"steady-state code triggered {len(self._collector.compiles)} "
+                f"steady-state code triggered {len(compiles)} "
                 f"XLA compilation(s) (allowed {self.max_compiles}): {names}")
 
 
@@ -105,6 +76,7 @@ def serve_steady_state(scheduler: str = "continuous", n_requests: int = 8):
     argmax, bucket padding) that also cache per shape -- so the guarded
     batch is genuinely steady-state.
     """
+    import jax
     import numpy as np
 
     from repro.configs import get_config, smoke_config

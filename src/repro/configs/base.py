@@ -188,6 +188,12 @@ class ServeConfig:
     # more requeue past this surfaces a "retries_exhausted" failure with
     # the partial tokens instead of looping forever under pressure
     max_retries: int = 32
+    # --- hybrid-format telemetry (repro/obs/numerics.py, DESIGN.md §15) ---
+    # fold per-burst device-side numeric stats (softmax-input exponent
+    # range pre/post max-subtraction; fp2fx8 scale histogram + int8
+    # saturation from the final burst cache) into the burst/spec outputs;
+    # part of the burst compile key — flipping it retraces
+    telemetry: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

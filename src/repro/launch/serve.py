@@ -114,6 +114,19 @@ def main():
                     help="nucleus sampling: keep the smallest token set "
                          "with probability mass >= p (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the serve "
+                         "(spans: admit/prefill/burst/spec-verify/compile/"
+                         "preempt/evict/quarantine) to PATH — load it in "
+                         "ui.perfetto.dev (DESIGN.md §15)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append periodic metrics-registry JSONL snapshots "
+                         "to PATH and print the end-of-run metrics report")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="fold per-burst device-side numeric stats (softmax "
+                         "exponent range, fp2fx8 scale histogram, int8 "
+                         "saturation) into the burst outputs and print the "
+                         "numerics summary (retraces the burst)")
     args = ap.parse_args()
 
     import jax
@@ -159,7 +172,14 @@ def main():
                        draft_model=args.draft_model,
                        audit=args.audit,
                        max_queue=args.max_queue,
-                       max_retries=args.max_retries)
+                       max_retries=args.max_retries,
+                       telemetry=args.telemetry)
+
+    from repro.obs import Obs
+    obs = None
+    if args.trace or args.metrics_out:
+        obs = Obs.enabled(metrics_path=args.metrics_out)
+        obs.tracer.enabled = args.trace is not None
 
     # the paged layout, prefix cache, spec decoding, and chunked prefill
     # live in the slot-pool scheduler, so those flags route through it even
@@ -184,7 +204,7 @@ def main():
                 max_new=int(rng.integers(max(1, args.max_new // 2),
                                          args.max_new + 1)),
                 frames=frames, deadline=args.deadline))
-        eng = SlotPoolEngine(model, params, scfg, key=sample_key)
+        eng = SlotPoolEngine(model, params, scfg, key=sample_key, obs=obs)
         try:
             done = eng.run(reqs)
         except KeyboardInterrupt:
@@ -209,6 +229,16 @@ def main():
                   f"accepted={st['accepted_tokens']} (rate {acc:.2f}) "
                   f"tokens/model-call="
                   f"{st['tokens_emitted'] / max(1, st['model_calls']):.2f}")
+        if args.trace:
+            eng.obs.tracer.write(args.trace)
+            print(f"# wrote trace {args.trace} "
+                  f"({len(eng.obs.tracer.events)} events; load in "
+                  f"ui.perfetto.dev)")
+        if args.metrics_out:
+            print(eng.obs.metrics.report())
+            print(f"# wrote metrics {args.metrics_out}")
+        if args.telemetry:
+            print(f"numerics: {eng.obs.numerics.summary()}")
         return
 
     batch = {"tokens": jax.random.randint(
@@ -219,9 +249,17 @@ def main():
     # the sampling key derives from --seed (it used to be dropped, so
     # --temperature runs always sampled with the hardcoded PRNGKey(0))
     out = generate(model, params, batch, scfg, max_new=args.max_new,
-                   key=sample_key)
+                   key=sample_key,
+                   tracer=obs.tracer if obs is not None else None)
     for i, row in enumerate(out.tolist()):
         print(f"[{i}] {row}")
+    if args.trace:
+        obs.tracer.write(args.trace)
+        print(f"# wrote trace {args.trace} ({len(obs.tracer.events)} "
+              f"events; load in ui.perfetto.dev)")
+    if args.metrics_out:
+        print("# --metrics-out: serve.* metrics live in the slot-pool "
+              "scheduler; rerun with --scheduler continuous|spec")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,218 @@
+"""Hybrid-format telemetry (DESIGN.md §15): device-side per-burst numeric
+stats plus the host-side accumulator that folds them into a run summary.
+
+This is the Hyft-specific observability pillar — the paper's claim is that
+hybrid fp/fixed formats hold accuracy *because* the realized dynamic range
+of softmax inputs (post max-subtraction) and KV rows is narrow; these
+functions measure that range at runtime:
+
+  logit_stats / reduce_logit_stats
+      running exponent range of softmax/sampling inputs pre and post
+      max-subtraction, computed inside the jitted burst at the cost of a
+      few row reductions per step (a NaN-poisoned burst propagates NaN
+      into z_max, which is exactly the explanation the quarantine wants)
+  format_stats
+      fp2fx8 KV telemetry from the final burst cache: int8 saturation
+      counts (|raw| == 127, the clip level of fp2fx8_quantize) and a
+      64-bin power-of-two histogram of the per-row scales (only written
+      rows — scale 0 means an untouched position, e.g. unallocated pages)
+  NumericsMonitor
+      host accumulator: one small device→host sync per burst when
+      ``ServeConfig.telemetry`` is on, keeps the most recent burst's stats
+      (``last``) so quarantine decisions can be annotated with the numbers
+      that triggered them, and counts fp→fx convert volume at the §14
+      format boundaries (KV quantize on write).
+
+Everything in the jit-side functions is shape-static: the returned pytree
+structure depends only on the cache structure, so it is a valid jit output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+SCALE_BINS = 64
+# bin = floor(log2(scale)) + offset, clipped to [0, SCALE_BINS); offset 40
+# centres the fp2fx8 regime (scales ~2^-12..2^-2 for unit-variance KV)
+SCALE_BIN_OFFSET = 40
+_INT8_SAT = 127  # |raw| at the fp2fx8_quantize clip level
+
+
+def logit_stats(logits, active):
+    """Per-step exponent-range stats of the sampling logits.
+
+    logits: (B, V) float, active: (B,) bool.  Returns a (3,) f32 vector
+    [z_max, z_min, zsub_min] over active rows, where zsub_min is the
+    minimum of (z - max(z)) — the post-max-subtraction softmax input range.
+    Inactive rows contribute neutral values; NaNs propagate (by design).
+    """
+    x = logits.astype(F32)
+    row_max = jnp.max(x, axis=-1)
+    row_min = jnp.min(x, axis=-1)
+    sub_min = row_min - row_max
+    neg = F32(-jnp.inf)
+    pos = F32(jnp.inf)
+    z_max = jnp.max(jnp.where(active, row_max, neg))
+    z_min = jnp.min(jnp.where(active, row_min, pos))
+    zs_min = jnp.min(jnp.where(active, sub_min, pos))
+    return jnp.stack([z_max, z_min, zs_min])
+
+
+def reduce_logit_stats(per_step):
+    """Reduce stacked (T, 3) per-step stats to one burst dict."""
+    return {
+        "z_max": jnp.max(per_step[:, 0]),
+        "z_min": jnp.min(per_step[:, 1]),
+        "zsub_min": jnp.min(per_step[:, 2]),
+    }
+
+
+def _leaf_name(path) -> str:
+    name = ""
+    for p in path:
+        key = getattr(p, "key", None)
+        if isinstance(key, str):
+            name = key
+    return name
+
+
+def format_stats(cache) -> Dict[str, jnp.ndarray]:
+    """fp2fx8 KV telemetry over a cache pytree (jit-safe).
+
+    int8 leaves feed the saturation count; ``*_scale`` leaves feed the
+    power-of-two scale histogram and min/max (zero scales = unwritten
+    positions, skipped).  Returns {} for unquantized caches — the pytree
+    structure is static per cache structure, so jit is happy either way.
+    """
+    sat = jnp.zeros((), jnp.int32)
+    hist = jnp.zeros((SCALE_BINS,), F32)
+    smin = F32(jnp.inf)
+    smax = F32(0.0)
+    quantized = False
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        name = _leaf_name(path)
+        if leaf.dtype == jnp.int8:
+            quantized = True
+            sat = sat + jnp.sum(
+                (jnp.abs(leaf.astype(jnp.int32)) >= _INT8_SAT)
+                .astype(jnp.int32))
+        elif name.endswith("_scale"):
+            s = leaf.astype(F32).reshape(-1)
+            written = s > 0
+            e = jnp.clip(
+                jnp.floor(jnp.log2(jnp.maximum(s, F32(1e-45))))
+                .astype(jnp.int32) + SCALE_BIN_OFFSET, 0, SCALE_BINS - 1)
+            hist = hist + jnp.bincount(
+                e, weights=written.astype(F32), length=SCALE_BINS)
+            smin = jnp.minimum(
+                smin, jnp.min(jnp.where(written, s, F32(jnp.inf))))
+            smax = jnp.maximum(smax, jnp.max(s))
+    if not quantized:
+        return {}
+    return {"kv_saturated": sat, "kv_scale_hist": hist,
+            "kv_scale_min": smin, "kv_scale_max": smax}
+
+
+def int8_size(cache) -> int:
+    """Host-side static count of int8 cache elements (saturation base)."""
+    return sum(int(leaf.size) for leaf in jax.tree_util.tree_leaves(cache)
+               if hasattr(leaf, "dtype") and leaf.dtype == jnp.int8)
+
+
+class NumericsMonitor:
+    """Host accumulator for per-burst telemetry dicts."""
+
+    def __init__(self):
+        self.bursts = 0
+        self.z_max = -math.inf
+        self.z_min = math.inf
+        self.zsub_min = math.inf
+        self.kv_saturated = 0
+        self.kv_int8_total = 0
+        self.kv_scale_hist = np.zeros(SCALE_BINS, dtype=np.int64)
+        self.kv_scale_min = math.inf
+        self.kv_scale_max = 0.0
+        self.converts = 0
+        self.last: Dict[str, float] = {}
+        self.quarantine_events: List[dict] = []
+
+    def update(self, tstats) -> Dict[str, float]:
+        """Fold one burst's device stats dict; returns the host-side
+        scalars for this burst (also kept as ``self.last``)."""
+        if not tstats:
+            return {}
+        d = {k: np.asarray(v) for k, v in tstats.items()}
+        self.bursts += 1
+        last: Dict[str, float] = {}
+        if "z_max" in d:
+            zmax = float(d["z_max"])
+            zmin = float(d["z_min"])
+            zsub = float(d["zsub_min"])
+            last.update(z_max=zmax, z_min=zmin, zsub_min=zsub)
+            # NaN-poisoned bursts leave the running range untouched but
+            # stay visible in ``last`` (and hence quarantine annotations)
+            if math.isfinite(zmax):
+                self.z_max = max(self.z_max, zmax)
+            if math.isfinite(zmin):
+                self.z_min = min(self.z_min, zmin)
+            if math.isfinite(zsub):
+                self.zsub_min = min(self.zsub_min, zsub)
+        if "kv_saturated" in d:
+            sat = int(d["kv_saturated"])
+            self.kv_saturated = sat  # cache-wide count, latest wins
+            self.kv_scale_hist = d["kv_scale_hist"].astype(np.int64)
+            smin = float(d["kv_scale_min"])
+            smax = float(d["kv_scale_max"])
+            if math.isfinite(smin):
+                self.kv_scale_min = min(self.kv_scale_min, smin)
+            self.kv_scale_max = max(self.kv_scale_max, smax)
+            last.update(kv_saturated=sat, kv_scale_min=smin,
+                        kv_scale_max=smax)
+        self.last = last
+        return last
+
+    def add_converts(self, n: int) -> None:
+        self.converts += int(n)
+
+    def record_quarantine(self, rid, where: str) -> dict:
+        """Annotate a quarantine decision with the most recent burst's
+        numeric stats (the numbers that triggered the ladder)."""
+        ev = {"rid": rid, "where": where, **self.last}
+        self.quarantine_events.append(ev)
+        return ev
+
+    def summary(self) -> dict:
+        def _f(v):
+            return v if math.isfinite(v) else None
+
+        out = {
+            "bursts": self.bursts,
+            "z_max": _f(self.z_max) if self.bursts else None,
+            "z_min": _f(self.z_min) if self.bursts else None,
+            "zsub_min": _f(self.zsub_min) if self.bursts else None,
+            "converts": self.converts,
+        }
+        if self.kv_scale_hist.any() or self.kv_int8_total:
+            nz = np.nonzero(self.kv_scale_hist)[0]
+            out.update({
+                "kv_saturated": self.kv_saturated,
+                "kv_int8_total": self.kv_int8_total,
+                "kv_saturation_rate": (
+                    self.kv_saturated / self.kv_int8_total
+                    if self.kv_int8_total else 0.0),
+                "kv_scale_min": _f(self.kv_scale_min),
+                "kv_scale_max": self.kv_scale_max,
+                # sparse histogram: {exponent: count}, exponent = log2(scale)
+                "kv_scale_hist": {
+                    int(i - SCALE_BIN_OFFSET): int(self.kv_scale_hist[i])
+                    for i in nz},
+            })
+        if self.quarantine_events:
+            out["quarantine_events"] = list(self.quarantine_events)
+        return out

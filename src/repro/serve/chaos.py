@@ -101,6 +101,7 @@ class ChaosMonkey:
         self.faulted_rids: set = set()
         self._held: list = []           # squeezed pages (an audit holder)
         self._hold_left = 0
+        self._tracer = None             # the engine's tracer, set by fire()
 
     # -- plumbing ------------------------------------------------------
 
@@ -113,6 +114,11 @@ class ChaosMonkey:
     def _log(self, point: str, kind: str, **detail) -> None:
         self.n_faults += 1
         self.log.append(dict(point=point, kind=kind, **detail))
+        if self._tracer is not None:
+            # injected faults show up in the trace next to the spans they
+            # perturb (DESIGN.md §15)
+            self._tracer.instant(f"chaos.{kind}", cat="chaos", point=point,
+                                 **detail)
 
     def summary(self) -> dict:
         by_kind: dict = {}
@@ -124,6 +130,7 @@ class ChaosMonkey:
     # -- injection points ----------------------------------------------
 
     def fire(self, eng, point: str) -> None:
+        self._tracer = eng.obs.tracer
         if point == "tick":
             self._tick(eng)
         elif point == "pre_burst":

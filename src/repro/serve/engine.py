@@ -51,9 +51,11 @@ def build_prefill(model):
     """
     ck = model.cfg
     if ck not in _PREFILL_CACHE:
-        return _cache_put(_PREFILL_CACHE, ck, jax.jit(
-            lambda params, cache, batch: model.prefill(params, cache, batch),
-            donate_argnums=(1,)))
+        def prefill(params, cache, batch):
+            with jax.named_scope("prefill"):
+                return model.prefill(params, cache, batch)
+        return _cache_put(_PREFILL_CACHE, ck,
+                          jax.jit(prefill, donate_argnums=(1,)))
     return _PREFILL_CACHE[ck]
 
 
@@ -108,9 +110,11 @@ def build_serve_step(model, scfg: ServeConfig):
     if ck not in _STEP_CACHE:
         @functools.partial(jax.jit, donate_argnums=(1,))
         def step(params, cache, tokens1, pos, key):
-            logits, cache = model.decode_step(params, cache, tokens1, pos)
-            nxt = _sample(logits[:, -1, :], key, scfg.temperature,
-                          scfg.top_k, scfg.top_p)
+            with jax.named_scope("serve_step"):
+                logits, cache = model.decode_step(params, cache, tokens1,
+                                                  pos)
+                nxt = _sample(logits[:, -1, :], key, scfg.temperature,
+                              scfg.top_k, scfg.top_p)
             return nxt.astype(I32)[:, None], cache
         _cache_put(_STEP_CACHE, ck, step)
     return _STEP_CACHE[ck]
@@ -129,16 +133,17 @@ def build_decode_loop(model, scfg: ServeConfig, steps: int):
         @functools.partial(jax.jit, donate_argnums=(1,))
         def loop(params, cache, tok0, pos0, key):
             def body(carry, i):
-                cache_c, tok, key_c = carry
-                if scfg.temperature > 0:
-                    key_c, sub = jax.random.split(key_c)
-                else:
-                    sub = key_c
-                logits, cache_c = model.decode_step(params, cache_c, tok,
-                                                    pos0 + i)
-                nxt = _sample(logits[:, -1, :], sub, scfg.temperature,
-                              scfg.top_k, scfg.top_p)
-                tok = nxt.astype(I32)[:, None]
+                with jax.named_scope("decode_step"):
+                    cache_c, tok, key_c = carry
+                    if scfg.temperature > 0:
+                        key_c, sub = jax.random.split(key_c)
+                    else:
+                        sub = key_c
+                    logits, cache_c = model.decode_step(params, cache_c,
+                                                        tok, pos0 + i)
+                    nxt = _sample(logits[:, -1, :], sub, scfg.temperature,
+                                  scfg.top_k, scfg.top_p)
+                    tok = nxt.astype(I32)[:, None]
                 return (cache_c, tok, key_c), tok[:, 0]
             (cache, _, _), toks = jax.lax.scan(body, (cache, tok0, key),
                                                jnp.arange(steps, dtype=I32))
@@ -174,18 +179,26 @@ def build_prefill_chunk(model, scfg: ServeConfig, width: int):
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def chunk(params, cache, toks, start, n_valid, gate):
-        logits, cache = model.prefill_chunk(params, cache, toks, start,
-                                            lengths=n_valid, write_mask=gate)
-        pick = jnp.maximum(n_valid - 1, 0).astype(I32)[:, None, None]
-        last = jnp.take_along_axis(logits, pick, axis=1)[:, 0]
+        with jax.named_scope("prefill_chunk"):
+            logits, cache = model.prefill_chunk(params, cache, toks, start,
+                                                lengths=n_valid,
+                                                write_mask=gate)
+            pick = jnp.maximum(n_valid - 1, 0).astype(I32)[:, None, None]
+            last = jnp.take_along_axis(logits, pick, axis=1)[:, 0]
         return last.astype(jnp.float32), cache
 
     return _cache_put(_CHUNK_CACHE, ck, chunk)
 
 
 def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
-             key=None):
-    """Prefill the prompt then decode ``max_new`` tokens. Returns (B, max_new)."""
+             key=None, tracer=None):
+    """Prefill the prompt then decode ``max_new`` tokens. Returns (B, max_new).
+
+    ``tracer``: optional ``repro.obs.trace.Tracer`` — the host decode loop
+    and the prefill/scan dispatches run under spans when provided."""
+    if tracer is None:
+        from repro.obs.trace import NULL_TRACER
+        tracer = NULL_TRACER
     key = key if key is not None else jax.random.PRNGKey(0)
     from repro.models import resolve_attn_mode
     model = resolve_attn_mode(model, scfg.attn_mode)
@@ -222,17 +235,19 @@ def generate(model, params, batch: dict, scfg: ServeConfig, max_new: int,
     if scfg.decode_loop == "host":
         out = [tok]
         step = build_serve_step(model, scfg)
-        for i in range(max_new - 1):
-            if scfg.temperature > 0:
-                key, sub = jax.random.split(key)
-            else:
-                sub = key
-            tok, cache = step(params, cache, tok, pos + i, sub)
-            out.append(tok)
+        with tracer.span("decode_host_loop", steps=max_new - 1):
+            for i in range(max_new - 1):
+                if scfg.temperature > 0:
+                    key, sub = jax.random.split(key)
+                else:
+                    sub = key
+                tok, cache = step(params, cache, tok, pos + i, sub)
+                out.append(tok)
         return jnp.concatenate(out, axis=1)
 
     if max_new <= 1:
         return tok
-    loop = build_decode_loop(model, scfg, max_new - 1)
-    toks, _ = loop(params, cache, tok, pos, key)
+    with tracer.span("decode_scan", steps=max_new - 1):
+        loop = build_decode_loop(model, scfg, max_new - 1)
+        toks, _ = loop(params, cache, tok, pos, key)
     return jnp.concatenate([tok, toks], axis=1)

@@ -87,6 +87,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
+from repro.obs import Obs, compile_watch
+from repro.obs import numerics as obs_numerics
 from repro.serve import engine, kvpool
 
 I32 = jnp.int32
@@ -155,9 +157,13 @@ class Completion:
         return self.finished_at - self.arrival
 
     @property
-    def ttft(self) -> float:
-        return (self.token_times[0] if self.token_times
-                else self.finished_at) - self.arrival
+    def ttft(self) -> Optional[float]:
+        """Time to first token, or None when the request never emitted one
+        (failed/cancelled/zero-token) — aggregations must skip None rather
+        than fold total latency into the TTFT percentiles."""
+        if not self.token_times:
+            return None
+        return self.token_times[0] - self.arrival
 
 
 def _bucket(n: int, lo: int = 4) -> int:
@@ -195,7 +201,7 @@ TTL_NONE = 1 << 30  # "no deadline" sentinel: never decrements to zero
 def build_burst(model, scfg: ServeConfig, steps: int):
     """Jit'd (params, cache, tok, lengths, active, budget, ttl, key) ->
     (emitted (steps, slots), oks (steps, slots), cache, tok, lengths,
-    active, budget, ttl, key).
+    active, budget, ttl, key, tstats).
 
     One ``lax.scan`` of ``steps`` masked decode steps.  Every slot computes
     every step (uniform shapes), but only active slots write their KV
@@ -209,7 +215,11 @@ def build_burst(model, scfg: ServeConfig, steps: int):
     health bit — False where an ACTIVE slot's next-token logits went
     non-finite (the host quarantines that slot; idle rows report True) —
     the cheap all-finite reduction the robustness layer keys on
-    (DESIGN.md §13).
+    (DESIGN.md §13).  ``tstats`` is the per-burst hybrid-format telemetry
+    dict (DESIGN.md §15): empty when ``scfg.telemetry`` is off (the flag is
+    part of the compile key), else the softmax-input exponent range over
+    the burst plus fp2fx8 scale/saturation stats of the final cache —
+    computed in-jit at the cost of a few row reductions per step.
     """
     kcfg = _burst_key_cfg(scfg)
     eos = kcfg.eos_id
@@ -225,8 +235,9 @@ def build_burst(model, scfg: ServeConfig, steps: int):
                 key_c, sub = jax.random.split(key_c)
             else:
                 sub = key_c
-            logits, cache_c = model.decode_step(params, cache_c, tok_c, len_c,
-                                                write_mask=act_c)
+            with jax.named_scope("burst_step"):
+                logits, cache_c = model.decode_step(params, cache_c, tok_c,
+                                                    len_c, write_mask=act_c)
             last = logits[:, -1, :]
             ok = jnp.isfinite(last).all(-1) | ~act_c
             nxt = engine._sample(last, sub, scfg.temperature,
@@ -239,16 +250,26 @@ def build_burst(model, scfg: ServeConfig, steps: int):
             if eos is not None:
                 alive = alive & (nxt != eos)
             tok_c = jnp.where(act_c, nxt, tok_c[:, 0])[:, None]
-            return (cache_c, tok_c, len_c, alive, bud_c, ttl_c, key_c), \
-                (emit, ok)
+            ys = (emit, ok)
+            if kcfg.telemetry:
+                ys = ys + (obs_numerics.logit_stats(last, act_c),)
+            return (cache_c, tok_c, len_c, alive, bud_c, ttl_c, key_c), ys
 
-        carry, (emits, oks) = jax.lax.scan(
+        carry, ys = jax.lax.scan(
             body, (cache, tok, lengths, active, budget, ttl, key), None,
             length=steps)
         cache, tok, lengths, active, budget, ttl, key = carry
+        if kcfg.telemetry:
+            emits, oks, zs = ys
+            tstats = dict(obs_numerics.reduce_logit_stats(zs),
+                          **obs_numerics.format_stats(cache))
+        else:
+            emits, oks = ys
+            tstats = {}
         # returning the cache gives the donated input buffers an output to
         # alias with (true in-place burst on TPU)
-        return emits, oks, cache, tok, lengths, active, budget, ttl, key
+        return emits, oks, cache, tok, lengths, active, budget, ttl, key, \
+            tstats
 
     return engine._cache_put(_BURST_CACHE, ck, burst)
 
@@ -313,6 +334,18 @@ def build_encode(model):
         _ENCODE_CACHE, ck, jax.jit(lambda p, fr: model.encode(p, fr)))
 
 
+# legacy ``stats`` keys, now counters/gauges in the Obs metrics registry
+# (the ``SlotPoolEngine.stats`` property reconstructs the old dict) — the
+# README "Observability" section documents the key -> metric mapping
+_STAT_COUNTERS = (
+    "admitted", "bursts", "prefills", "burst_steps", "slot_steps_active",
+    "tokens_emitted", "prompt_tokens", "prefill_tokens", "cached_tokens",
+    "prefix_hits", "preemptions", "model_calls", "spec_steps",
+    "draft_tokens", "accepted_tokens", "rejected", "expired", "cancelled",
+    "quarantines", "fp32_retries", "failures", "stragglers", "audits")
+_STAT_GAUGES = ("peak_active", "pages_peak")
+
+
 class SlotPoolEngine:
     """Host-side scheduler around the slot-pool cache and the jitted burst.
 
@@ -322,12 +355,15 @@ class SlotPoolEngine:
     """
 
     def __init__(self, model, params, scfg: ServeConfig, key=None,
-                 draft=None, chaos=None):
+                 draft=None, chaos=None, obs: Optional[Obs] = None):
         from repro.distributed.fault_tolerance import StragglerMonitor
         from repro.models import resolve_attn_mode
         self.model = resolve_attn_mode(model, scfg.attn_mode)
         self.params = params
         self.scfg = scfg
+        # observability bundle (DESIGN.md §15): a fresh disabled-tracer Obs
+        # per engine by default, so benchmark engines never share counters
+        self.obs = obs if obs is not None else Obs()
         self.key = key if key is not None else jax.random.PRNGKey(0)
         n = scfg.n_slots
         if scfg.max_queue < 0:
@@ -445,17 +481,81 @@ class SlotPoolEngine:
         # the fp32 fallback engine must fail structurally, never recurse
         self._allow_fp32_retry = True
         self._zero_pages = None                  # lazy jitted page scrub
-        self.stats = {"admitted": 0, "bursts": 0, "prefills": 0,
-                      "burst_steps": 0, "slot_steps_active": 0,
-                      "peak_active": 0, "tokens_emitted": 0,
-                      "prompt_tokens": 0, "prefill_tokens": 0,
-                      "cached_tokens": 0, "prefix_hits": 0,
-                      "preemptions": 0, "pages_peak": 0,
-                      "model_calls": 0, "spec_steps": 0,
-                      "draft_tokens": 0, "accepted_tokens": 0,
-                      "rejected": 0, "expired": 0, "cancelled": 0,
-                      "quarantines": 0, "fp32_retries": 0, "failures": 0,
-                      "stragglers": 0, "audits": 0}
+        # --- metrics (DESIGN.md §15) ---
+        # the legacy ``stats`` dict is now a read-only view over the
+        # registry (see the ``stats`` property); every counter/gauge lives
+        # under serve.<key> with scheduler+family labels
+        self._labels = dict(scheduler=scfg.scheduler,
+                            family=self.model.cfg.family)
+        reg = self.obs.metrics
+        self._counters = {
+            k: reg.counter(f"serve.{k}", **self._labels)
+            for k in _STAT_COUNTERS}
+        self._gauges = {
+            k: reg.gauge(f"serve.{k}", **self._labels)
+            for k in _STAT_GAUGES + ("queue_depth", "slot_occupancy",
+                                     "pages_in_use")}
+        self._hists = {
+            k: reg.histogram(f"serve.{k}", **self._labels)
+            for k in ("ttft_s", "tbt_s", "burst_wall_s")}
+        # fp→fx convert volume at the §14 boundaries: elements quantized
+        # per KV-cache token write (k + v rows), counted host-side
+        self._quantized = scfg.cache_dtype == "fp2fx8"
+        if self._quantized:
+            cfg = self.model.cfg
+            heads = getattr(cfg, "n_kv_heads", None) or getattr(
+                cfg, "n_heads", 1)
+            self._converts_per_tok = (2 * cfg.n_layers * heads
+                                      * getattr(cfg, "d_head", 1))
+            self.obs.numerics.kv_int8_total = obs_numerics.int8_size(
+                self.cache)
+        else:
+            self._converts_per_tok = 0
+
+    # -- metrics helpers (DESIGN.md §15) --------------------------------
+
+    def _count(self, key: str, n: int = 1) -> None:
+        self._counters[key].inc(n)
+
+    def _peak(self, key: str, v: float) -> None:
+        self._gauges[key].track_max(v)
+
+    @property
+    def stats(self) -> dict:
+        """Back-compat view: the legacy ad-hoc stats dict, reconstructed
+        read-only from the metrics registry."""
+        d = {}
+        for k in ("admitted", "bursts", "prefills", "burst_steps",
+                  "slot_steps_active"):
+            d[k] = self._counters[k].value
+        d["peak_active"] = int(self._gauges["peak_active"].value)
+        for k in ("tokens_emitted", "prompt_tokens", "prefill_tokens",
+                  "cached_tokens", "prefix_hits", "preemptions"):
+            d[k] = self._counters[k].value
+        d["pages_peak"] = int(self._gauges["pages_peak"].value)
+        for k in ("model_calls", "spec_steps", "draft_tokens",
+                  "accepted_tokens", "rejected", "expired", "cancelled",
+                  "quarantines", "fp32_retries", "failures", "stragglers",
+                  "audits"):
+            d[k] = self._counters[k].value
+        return d
+
+    def _record_completion(self, c: Completion) -> None:
+        """Latency histograms at completion time — TTFT (skipping None)
+        and per-gap TBT — so metric aggregates reconcile with post-hoc
+        numbers computed from the Completion records by construction."""
+        t = c.ttft
+        if t is not None:
+            self._hists["ttft_s"].observe(t)
+        tt = c.token_times
+        for i in range(1, len(tt)):
+            self._hists["tbt_s"].observe(tt[i] - tt[i - 1])
+
+    def _count_converts(self, n_tokens: int) -> None:
+        """fp→fx convert volume for ``n_tokens`` KV-cache token writes
+        (the §14 quantize boundary; no-op for unquantized caches)."""
+        if self._quantized and n_tokens > 0:
+            self.obs.numerics.add_converts(n_tokens * self._converts_per_tok)
 
     # -- warmup --------------------------------------------------------
 
@@ -473,52 +573,57 @@ class SlotPoolEngine:
         """
         scfg = self.scfg
         n = scfg.n_slots
-        cap = min(_bucket(max_prompt_len), scfg.max_len)
-        c0 = scfg.prefill_chunk
-        widths, b = set(), 4
-        while b < cap:
-            widths.add(min(c0, b) if c0 > 0 else b)
-            b *= 2
-        widths.add(min(c0, cap) if c0 > 0 else cap)
-        if frontend is not None and self._encode is not None:
-            g, g_top = 1, _bucket(n, lo=1)
-            while True:
-                jax.block_until_ready(self._encode(
-                    self.params, jnp.zeros((g,) + tuple(frontend))))
-                if g >= g_top:
-                    break
-                g *= 2
-        if not self.paged and self._needs_reset:
-            fresh = self.model.init_cache(self.params, n, scfg.max_len,
-                                          scfg.cache_dtype)
-            self.cache = self._scatter(self.cache, fresh,
-                                       jnp.arange(n, dtype=I32))
-        for w in sorted(widths):
-            pc = engine.build_prefill_chunk(self.model, _burst_key_cfg(scfg),
-                                            w)
-            # gate all-False: every row computes but none writes, so the
-            # live pool is untouched — no scratch/restore dance needed
-            out, self.cache = pc(self.params, self.cache,
-                                 jnp.zeros((n, w), I32), jnp.zeros(n, I32),
-                                 jnp.ones(n, I32), jnp.zeros(n, bool))
-            jax.block_until_ready(out)
-        if self.spec:
-            K = self.scfg.draft_k
-            out = self._spec_step(self.params, self.cache,
+        tracer = self.obs.tracer
+        with compile_watch(tracer, enabled=tracer.enabled), \
+                tracer.span("prewarm", max_prompt_len=max_prompt_len):
+            cap = min(_bucket(max_prompt_len), scfg.max_len)
+            c0 = scfg.prefill_chunk
+            widths, b = set(), 4
+            while b < cap:
+                widths.add(min(c0, b) if c0 > 0 else b)
+                b *= 2
+            widths.add(min(c0, cap) if c0 > 0 else cap)
+            if frontend is not None and self._encode is not None:
+                g, g_top = 1, _bucket(n, lo=1)
+                while True:
+                    jax.block_until_ready(self._encode(
+                        self.params, jnp.zeros((g,) + tuple(frontend))))
+                    if g >= g_top:
+                        break
+                    g *= 2
+            if not self.paged and self._needs_reset:
+                fresh = self.model.init_cache(self.params, n, scfg.max_len,
+                                              scfg.cache_dtype)
+                self.cache = self._scatter(self.cache, fresh,
+                                           jnp.arange(n, dtype=I32))
+            for w in sorted(widths):
+                pc = engine.build_prefill_chunk(
+                    self.model, _burst_key_cfg(scfg), w)
+                # gate all-False: every row computes but none writes, so the
+                # live pool is untouched — no scratch/restore dance needed
+                out, self.cache = pc(self.params, self.cache,
+                                     jnp.zeros((n, w), I32),
+                                     jnp.zeros(n, I32),
+                                     jnp.ones(n, I32), jnp.zeros(n, bool))
+                jax.block_until_ready(out)
+            if self.spec:
+                K = self.scfg.draft_k
+                out = self._spec_step(self.params, self.cache,
+                                      jnp.zeros((n, 1), I32),
+                                      jnp.zeros((n, K), I32),
+                                      jnp.zeros(n, I32),
+                                      jnp.zeros(n, I32), jnp.zeros(n, bool),
+                                      jnp.zeros(n, I32))
+                self.cache = out[1]
+            else:
+                out = self._burst(self.params, self.cache,
                                   jnp.zeros((n, 1), I32),
-                                  jnp.zeros((n, K), I32), jnp.zeros(n, I32),
                                   jnp.zeros(n, I32), jnp.zeros(n, bool),
-                                  jnp.zeros(n, I32))
-            self.cache = out[1]
-        else:
-            out = self._burst(self.params, self.cache,
-                              jnp.zeros((n, 1), I32),
-                              jnp.zeros(n, I32), jnp.zeros(n, bool),
-                              jnp.zeros(n, I32),
-                              jnp.full(n, TTL_NONE, I32),
-                              jax.random.PRNGKey(0))
-            self.cache = out[2]
-        jax.block_until_ready(out[0])
+                                  jnp.zeros(n, I32),
+                                  jnp.full(n, TTL_NONE, I32),
+                                  jax.random.PRNGKey(0))
+                self.cache = out[2]
+            jax.block_until_ready(out[0])
 
     # -- admission -----------------------------------------------------
 
@@ -547,7 +652,7 @@ class SlotPoolEngine:
         hits); ``_prefill_step`` feeds the rest chunk by chunk."""
         if not r.resume:
             self._register(r)
-            self.stats["admitted"] += 1
+            self._count("admitted")
         self.slot_rid[s] = r.rid
         self.slot_prompt[s] = np.asarray(r.tokens, np.int32)
         self.lengths[s] = start
@@ -555,8 +660,9 @@ class SlotPoolEngine:
         self.prefilling[s] = True
         self.budget[s] = r.max_new
         self._drafter_reset(s)
-        self.stats["prompt_tokens"] += len(r.tokens)
-        self.stats["prefill_tokens"] += len(r.tokens) - start
+        self._count("prompt_tokens", len(r.tokens))
+        self._count("prefill_tokens", len(r.tokens) - start)
+        self._count_converts(len(r.tokens) - start)
 
     def admit(self, reqs: list[Request], now: float) -> None:
         """Admit ``reqs`` into free slots — host bookkeeping only: per-slot
@@ -568,13 +674,16 @@ class SlotPoolEngine:
         frees its slot at that point."""
         if not reqs:
             return
-        free = [s for s in range(self.scfg.n_slots)
-                if self.slot_rid[s] is None]
-        assert len(reqs) <= len(free), "admitting more requests than slots"
-        if self.paged:
-            self._admit_paged(reqs, free)
-        else:
-            self._admit_dense(reqs, free)
+        with self.obs.tracer.span("admit", n=len(reqs),
+                                  rids=[r.rid for r in reqs]):
+            free = [s for s in range(self.scfg.n_slots)
+                    if self.slot_rid[s] is None]
+            assert len(reqs) <= len(free), \
+                "admitting more requests than slots"
+            if self.paged:
+                self._admit_paged(reqs, free)
+            else:
+                self._admit_dense(reqs, free)
 
     def _admit_dense(self, reqs, free):
         scfg = self.scfg
@@ -625,7 +734,9 @@ class SlotPoolEngine:
             return []
         pages = self.pool.alloc(n)
         if pages is None and self.trie is not None:
-            self.trie.evict(n - self.pool.free_pages)
+            with self.obs.tracer.span("evict",
+                                      short=n - self.pool.free_pages):
+                self.trie.evict(n - self.pool.free_pages)
             pages = self.pool.alloc(n)
         return pages
 
@@ -689,11 +800,10 @@ class SlotPoolEngine:
             self.slot_pages[s] = list(pages)
             self.block_tables[s, :] = 0
             self.block_tables[s, :len(pages)] = pages
-            self.stats["cached_tokens"] += matched
+            self._count("cached_tokens", matched)
             if matched:
-                self.stats["prefix_hits"] += 1
-        self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                       self.pool.pages_in_use)
+                self._count("prefix_hits")
+        self._peak("pages_peak", self.pool.pages_in_use)
 
     # -- chunked prefill ------------------------------------------------
 
@@ -729,14 +839,17 @@ class SlotPoolEngine:
             gate[s] = True
         if self.paged:
             self.cache["block_tables"] = jnp.asarray(self.block_tables)
-        pc = engine.build_prefill_chunk(self.model, _burst_key_cfg(scfg),
-                                        width)
-        # jnp.asarray copies the host mirror, so mutating self.lengths
-        # below cannot race the dispatched call
-        last, self.cache = pc(self.params, self.cache, jnp.asarray(toks),
-                              jnp.asarray(self.lengths),
-                              jnp.asarray(n_valid), jnp.asarray(gate))
-        self.stats["prefills"] += 1
+        with self.obs.tracer.span("prefill_chunk", width=width,
+                                  rows=len(rows)):
+            pc = engine.build_prefill_chunk(self.model,
+                                            _burst_key_cfg(scfg), width)
+            # jnp.asarray copies the host mirror, so mutating self.lengths
+            # below cannot race the dispatched call
+            last, self.cache = pc(self.params, self.cache,
+                                  jnp.asarray(toks),
+                                  jnp.asarray(self.lengths),
+                                  jnp.asarray(n_valid), jnp.asarray(gate))
+        self._count("prefills")
         for s in rows:
             self.lengths[s] += min(rem[s], width)
         # numeric health: every gated row's last-lane logits must be finite
@@ -751,8 +864,7 @@ class SlotPoolEngine:
             tok0 = np.asarray(self._first_token(last), np.int32)
             for s in fin:
                 self._finish_prefill(s, int(tok0[s]), now)
-        self.stats["peak_active"] = max(self.stats["peak_active"],
-                                        int(self.active.sum()))
+        self._peak("peak_active", int(self.active.sum()))
         self._audit_check()
 
     def _finish_prefill(self, s: int, tok0: int, now: float) -> None:
@@ -772,11 +884,10 @@ class SlotPoolEngine:
                 self.trie.insert(
                     [int(t) for t in ptoks[:nfull * self.scfg.page_size]],
                     self.slot_pages[s][:nfull])
-            self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                           self.pool.pages_in_use)
+            self._peak("pages_peak", self.pool.pages_in_use)
         self.outputs[rid].append(tok0)
         self.out_times[rid].append(now)
-        self.stats["tokens_emitted"] += 1
+        self._count("tokens_emitted")
         done = (self.budget[s] <= 1
                 or (self._eos is not None and tok0 == self._eos))
         if done:
@@ -814,7 +925,8 @@ class SlotPoolEngine:
             token_times=list(self.out_times.get(rid, [])),
             failure=FailureInfo(reason=reason, detail=detail,
                                 retries=self.retries.get(rid, 0)))
-        self.stats["failures"] += 1
+        self._count("failures")
+        self._record_completion(self.completions[rid])
 
     def _requeue(self, s: int, now: float) -> bool:
         """Push slot ``s``'s request back to the queue FRONT with the
@@ -856,9 +968,10 @@ class SlotPoolEngine:
             return False
         s = max(cands, key=lambda c: (self.requests[self.slot_rid[c]].arrival,
                                       self.slot_rid[c]))
+        self.obs.tracer.instant("preempt", rid=self.slot_rid[s], slot=s)
         self._requeue(s, self._now())
         self._free_slot(s)
-        self.stats["preemptions"] += 1
+        self._count("preemptions")
         self._audit_check()
         return True
 
@@ -885,8 +998,7 @@ class SlotPoolEngine:
                     self.block_tables[s, have:have + len(new)] = new
                     self.slot_pages[s].extend(new)
             if not short:
-                self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                               self.pool.pages_in_use)
+                self._peak("pages_peak", self.pool.pages_in_use)
                 return
             if not self._preempt_latest():
                 return
@@ -897,6 +1009,7 @@ class SlotPoolEngine:
             rid=rid, tokens=self.outputs[rid], prompt_len=len(r.tokens),
             finished_at=now, arrival=r.arrival,
             token_times=list(self.out_times[rid]))
+        self._record_completion(self.completions[rid])
 
     # -- decode --------------------------------------------------------
 
@@ -926,8 +1039,9 @@ class SlotPoolEngine:
         """Feed the burst wall time to the straggler monitor (outlier
         bursts are flagged, not folded into the EMA) and refresh the
         per-step estimate the deadline TTL uses."""
+        self._hists["burst_wall_s"].observe(dt)
         if self.straggler.observe(dt):
-            self.stats["stragglers"] += 1
+            self._count("stragglers")
         if self.straggler.ema > 0 and steps > 0:
             self._step_ema = self.straggler.ema / steps
 
@@ -936,9 +1050,10 @@ class SlotPoolEngine:
         failure with the tokens generated so far; slot + pages freed."""
         rid = self.slot_rid[s]
         d = self.requests[rid].deadline
+        self.obs.tracer.instant("expire", rid=rid, slot=s)
         self._fail(rid, "deadline", now, detail=f"deadline {d:.3f}s")
         self._free_slot(s)
-        self.stats["expired"] += 1
+        self._count("expired")
 
     def burst(self, now: float) -> None:
         """One jitted burst of ``decode_burst`` masked steps + host
@@ -961,29 +1076,35 @@ class SlotPoolEngine:
                 return
             self.cache["block_tables"] = jnp.asarray(self.block_tables)
         was_active = self.active.copy()
-        t_in = time.perf_counter()
-        emits, oks, self.cache, tok, lengths, active, budget, ttl_out, \
-            self.key = self._burst(
-                self.params, self.cache,
-                jnp.asarray(self.last_tok)[:, None],
-                jnp.asarray(self.lengths),
-                jnp.asarray(self.active),
-                jnp.asarray(self.budget),
-                jnp.asarray(self._ttl_vector(now)), self.key)
-        emits = np.asarray(emits)                       # (steps, n_slots)
-        oks = np.asarray(oks)                           # (steps, n_slots)
-        ttl_out = np.asarray(ttl_out)
-        # np.array (not asarray): jax exports read-only views, but admission
-        # writes per-slot entries into these host mirrors
-        self.lengths = np.array(lengths)
-        self.active = np.array(active)
-        self.budget = np.array(budget)
-        self.last_tok = np.array(tok)[:, 0]
-        self._observe_burst(time.perf_counter() - t_in, emits.shape[0])
-        self.stats["bursts"] += 1
-        self.stats["burst_steps"] += emits.shape[0]
-        self.stats["model_calls"] += emits.shape[0]
-        self.stats["slot_steps_active"] += int((emits != PAD).sum())
+        with self.obs.tracer.span("decode_burst",
+                                  active=int(self.active.sum())):
+            t_in = time.perf_counter()
+            emits, oks, self.cache, tok, lengths, active, budget, ttl_out, \
+                self.key, tstats = self._burst(
+                    self.params, self.cache,
+                    jnp.asarray(self.last_tok)[:, None],
+                    jnp.asarray(self.lengths),
+                    jnp.asarray(self.active),
+                    jnp.asarray(self.budget),
+                    jnp.asarray(self._ttl_vector(now)), self.key)
+            emits = np.asarray(emits)                   # (steps, n_slots)
+            oks = np.asarray(oks)                       # (steps, n_slots)
+            ttl_out = np.asarray(ttl_out)
+            # np.array (not asarray): jax exports read-only views, but
+            # admission writes per-slot entries into these host mirrors
+            self.lengths = np.array(lengths)
+            self.active = np.array(active)
+            self.budget = np.array(budget)
+            self.last_tok = np.array(tok)[:, 0]
+            self._observe_burst(time.perf_counter() - t_in, emits.shape[0])
+        if tstats:
+            self.obs.numerics.update(tstats)
+        self._count("bursts")
+        self._count("burst_steps", emits.shape[0])
+        self._count("model_calls", emits.shape[0])
+        n_active_steps = int((emits != PAD).sum())
+        self._count("slot_steps_active", n_active_steps)
+        self._count_converts(n_active_steps)
         for s in np.nonzero(was_active)[0]:
             col = emits[:, s]
             bad = np.nonzero(~oks[:, s])[0]
@@ -994,7 +1115,7 @@ class SlotPoolEngine:
             rid = self.slot_rid[s]
             self.outputs[rid].extend(toks)
             self.out_times[rid].extend([now] * len(toks))
-            self.stats["tokens_emitted"] += len(toks)
+            self._count("tokens_emitted", len(toks))
             if bad.size:
                 self._quarantine(s, now, where="burst")
                 continue
@@ -1044,7 +1165,7 @@ class SlotPoolEngine:
         draft, n_draft = self.drafter.draft_batch(contexts, want, K)
         # a model drafter's teacher-sync/draft-loop invocations count too,
         # so tokens-per-model-call never overstates the amortization
-        self.stats["model_calls"] += self.drafter.model_calls - calls0
+        self._count("model_calls", self.drafter.model_calls - calls0)
         if self.chaos is not None:
             # drafter-desync fault: junk drafts are REJECTED by exact
             # verification, so outputs are provably unchanged
@@ -1052,26 +1173,31 @@ class SlotPoolEngine:
                                                        want)
 
         was_active = self.active.copy()
-        t_in = time.perf_counter()
-        emitted, self.cache, tok, lengths, active, budget, n_acc, ok = \
-            self._spec_step(self.params, self.cache,
-                            jnp.asarray(self.last_tok)[:, None],
-                            jnp.asarray(draft), jnp.asarray(n_draft),
-                            jnp.asarray(self.lengths),
-                            jnp.asarray(self.active),
-                            jnp.asarray(self.budget))
-        emitted = np.asarray(emitted)                   # (n_slots, K + 1)
-        n_acc = np.asarray(n_acc)
-        ok = np.asarray(ok)                             # per-slot finite bit
-        self.lengths = np.array(lengths)
-        self.active = np.array(active)
-        self.budget = np.array(budget)
-        self.last_tok = np.array(tok)[:, 0]
-        self._observe_burst(time.perf_counter() - t_in, 1)
-        self.stats["bursts"] += 1
-        self.stats["burst_steps"] += 1
-        self.stats["spec_steps"] += 1
-        self.stats["model_calls"] += 1
+        with self.obs.tracer.span("spec_verify",
+                                  active=int(self.active.sum())):
+            t_in = time.perf_counter()
+            emitted, self.cache, tok, lengths, active, budget, n_acc, ok, \
+                tstats = self._spec_step(
+                    self.params, self.cache,
+                    jnp.asarray(self.last_tok)[:, None],
+                    jnp.asarray(draft), jnp.asarray(n_draft),
+                    jnp.asarray(self.lengths),
+                    jnp.asarray(self.active),
+                    jnp.asarray(self.budget))
+            emitted = np.asarray(emitted)               # (n_slots, K + 1)
+            n_acc = np.asarray(n_acc)
+            ok = np.asarray(ok)                         # per-slot finite bit
+            self.lengths = np.array(lengths)
+            self.active = np.array(active)
+            self.budget = np.array(budget)
+            self.last_tok = np.array(tok)[:, 0]
+            self._observe_burst(time.perf_counter() - t_in, 1)
+        if tstats:
+            self.obs.numerics.update(tstats)
+        self._count("bursts")
+        self._count("burst_steps")
+        self._count("spec_steps")
+        self._count("model_calls")
         for s in np.nonzero(was_active)[0]:
             if not ok[s]:
                 # non-finite verify logits poison every lane's argmax: no
@@ -1083,11 +1209,12 @@ class SlotPoolEngine:
             row = row[row != PAD].tolist()
             self.outputs[self.slot_rid[s]].extend(row)
             self.out_times[self.slot_rid[s]].extend([now] * len(row))
-            self.stats["tokens_emitted"] += len(row)
-            self.stats["draft_tokens"] += int(n_draft[s])
-            self.stats["accepted_tokens"] += int(n_acc[s])
+            self._count("tokens_emitted", len(row))
+            self._count("draft_tokens", int(n_draft[s]))
+            self._count("accepted_tokens", int(n_acc[s]))
+            self._count_converts(len(row))
             if row:
-                self.stats["slot_steps_active"] += 1
+                self._count("slot_steps_active")
             if not self.active[s]:                      # freed on device
                 self._finish(self.slot_rid[s], now)
                 self._free_slot(s)
@@ -1169,7 +1296,11 @@ class SlotPoolEngine:
         rid = self.slot_rid[s]
         nf = self.numeric_faults.get(rid, 0) + 1
         self.numeric_faults[rid] = nf
-        self.stats["quarantines"] += 1
+        self._count("quarantines")
+        # annotate the decision with the numeric stats that triggered
+        # it (the last telemetry burst's exponent/scale readings)
+        ev = self.obs.numerics.record_quarantine(rid, where or "burst")
+        self.obs.tracer.instant("quarantine", slot=s, fault=nf, **ev)
         if self.paged:
             self._scrub_slot_pages(s)
         else:
@@ -1191,7 +1322,7 @@ class SlotPoolEngine:
         emitted.  A clean retry completes the request (greedy outputs
         identical to a fault-free run); a retry that faults again surfaces
         a structured ``numeric_fault``."""
-        self.stats["fp32_retries"] += 1
+        self._count("fp32_retries")
         orig = self.requests[rid]
         done = list(self.outputs[rid])
         sched = ("continuous"
@@ -1234,7 +1365,8 @@ class SlotPoolEngine:
             rid=rid, tokens=self.outputs.get(rid, []),
             prompt_len=len(r.tokens), finished_at=now, arrival=r.arrival,
             token_times=list(self.out_times.get(rid, [])), cancelled=True)
-        self.stats["cancelled"] += 1
+        self._count("cancelled")
+        self._record_completion(self.completions[rid])
 
     def _apply_cancels(self, now: float) -> None:
         if not self._cancels:
@@ -1272,7 +1404,7 @@ class SlotPoolEngine:
             for r in late:
                 self._register(r)
                 self._fail(r.rid, "deadline", now, detail="expired in queue")
-                self.stats["expired"] += 1
+                self._count("expired")
         self._audit_check()
 
     def shutdown(self) -> dict[int, Completion]:
@@ -1306,7 +1438,7 @@ class SlotPoolEngine:
         chaos harness's squeezed pages ride along as extra holders."""
         if not self.scfg.audit or not self.paged:
             return
-        self.stats["audits"] += 1
+        self._count("audits")
         for s in range(self.scfg.n_slots):
             if self.slot_rid[s] is None and self.slot_pages[s]:
                 raise kvpool.AuditError(
@@ -1320,7 +1452,16 @@ class SlotPoolEngine:
         """Serve ``requests`` (sorted by ``arrival``) until every one has a
         DEFINITE outcome — finished, cancelled, or structured failure
         (DESIGN.md §13).  Malformed requests fail individually with reason
-        ``invalid`` instead of aborting the whole batch."""
+        ``invalid`` instead of aborting the whole batch.
+
+        With the tracer enabled, the whole run is under a compile watch: a
+        mid-flight XLA compile (a retrace the prewarm missed) shows up as a
+        backdated "compile" span in the trace (DESIGN.md §15)."""
+        tracer = self.obs.tracer
+        with compile_watch(tracer, enabled=tracer.enabled):
+            return self._run(requests)
+
+    def _run(self, requests: list[Request]) -> dict[int, Completion]:
         ok_reqs = []
         for r in sorted(requests, key=lambda r: r.arrival):
             self._register(r)
@@ -1355,7 +1496,7 @@ class SlotPoolEngine:
                         and len(self._queue) >= self.scfg.max_queue):
                     self._fail(r.rid, "queue_full", now,
                                detail=f"{len(self._queue)} waiting")
-                    self.stats["rejected"] += 1
+                    self._count("rejected")
                 else:
                     self._queue.append(r)
             free = sum(1 for rid in self.slot_rid if rid is None)
@@ -1368,6 +1509,13 @@ class SlotPoolEngine:
                 # page-starved admissions requeue their tail to the front
                 self.admit(batch, time.perf_counter() - t0)
                 self._audit_check()
+            # per-iteration load gauges + periodic metrics snapshot export
+            self._gauges["queue_depth"].set(len(self._queue))
+            self._gauges["slot_occupancy"].set(
+                sum(1 for rid in self.slot_rid if rid is not None))
+            if self.paged:
+                self._gauges["pages_in_use"].set(self.pool.pages_in_use)
+            self.obs.maybe_snapshot()
             if self.prefilling.any():
                 # at most ONE chunk per loop iteration: a long prompt's
                 # prefill interleaves with the decode bursts below instead
@@ -1381,6 +1529,7 @@ class SlotPoolEngine:
                 now = time.perf_counter() - t0
                 time.sleep(max(0.0, min(
                     self._pending[0].arrival - now, 0.01)))
+        self.obs.maybe_snapshot(force=True)
         return self.completions
 
 

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
+from repro.obs import numerics as obs_numerics
 from repro.serve import engine
 from repro.serve.scheduler import PAD, _bucket  # one emitted-lane filler
 
@@ -265,7 +266,11 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
     """Jit'd (params, cache, last_tok (B,1), draft (B,k), n_draft (B,),
     lengths (B,), active (B,), budget (B,)) -> (emitted (B, k+1)
     PAD-padded, cache, last_tok, lengths, active, budget, n_acc (B,),
-    ok (B,)).  ``ok`` is the numeric-health bit the robustness layer keys
+    ok (B,), tstats).  ``tstats`` is the per-step hybrid-format telemetry
+    dict (DESIGN.md §15) — empty unless ``scfg.telemetry`` is on, else the
+    valid verify lanes' exponent-range stats plus the cache's fp2fx8
+    scale/saturation stats.  ``ok`` is the numeric-health bit the
+    robustness layer keys
     on (DESIGN.md §13): False where any VALID verify lane of an active slot
     produced non-finite logits — the scheduler discards that slot's step
     and quarantines it (idle slots and padding lanes report True).
@@ -294,13 +299,22 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
              budget):
         toks = jnp.concatenate([last_tok, draft], axis=1)          # (B, S)
         n_valid = jnp.where(active, n_draft + 1, 1)
-        logits, cache = model.prefill_chunk(params, cache, toks, lengths,
-                                            lengths=n_valid,
-                                            write_mask=active)
+        with jax.named_scope("spec_verify"):
+            logits, cache = model.prefill_chunk(params, cache, toks,
+                                                lengths, lengths=n_valid,
+                                                write_mask=active)
         greedy = jnp.argmax(logits, -1).astype(I32)                # (B, S)
         lane = jnp.arange(S, dtype=I32)[None]
         lane_ok = jnp.isfinite(logits).all(-1)                     # (B, S)
         ok = (lane_ok | (lane >= n_valid[:, None])).all(1) | ~active
+        if scfg.telemetry:
+            lane_act = active[:, None] & (lane < n_valid[:, None])
+            zs = obs_numerics.logit_stats(
+                logits.reshape(-1, logits.shape[-1]), lane_act.reshape(-1))
+            tstats = dict(z_max=zs[0], z_min=zs[1], zsub_min=zs[2],
+                          **obs_numerics.format_stats(cache))
+        else:
+            tstats = {}
         dmask = jnp.arange(k, dtype=I32)[None] < n_draft[:, None]
         match = (draft == greedy[:, :-1]) & dmask
         n_acc = jnp.sum(jnp.cumprod(match.astype(I32), axis=1), axis=1)
@@ -320,7 +334,8 @@ def build_spec_step(model, scfg: ServeConfig, k: int):
         lengths = lengths + n_emit
         budget = budget - n_emit
         active = active & (budget > 0) & ~hit_eos
-        return emitted, cache, last_tok, lengths, active, budget, n_acc, ok
+        return emitted, cache, last_tok, lengths, active, budget, \
+            n_acc, ok, tstats
 
     return engine._cache_put(_SPEC_CACHE, ck, step)
 

@@ -39,8 +39,9 @@ def make_step_fn(model, tcfg: TrainConfig, opt_cfg: optim.OptConfig):
     schedule = SCHEDULES.get("warmup_cosine")
 
     def grads_of(params, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
+        with jax.named_scope("fwd_bwd"):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
         return loss, metrics, grads
 
     def step_fn(state, batch):
@@ -63,11 +64,12 @@ def make_step_fn(model, tcfg: TrainConfig, opt_cfg: optim.OptConfig):
         else:
             loss, metrics, grads = grads_of(params, batch)
 
-        grads, gnorm = optim.clip_by_global_norm(grads, tcfg.grad_clip)
-        lr_scale = schedule(state["step"], warmup=tcfg.warmup_steps,
-                            total=tcfg.total_steps)
-        new_params, new_opt = optim.update(opt_cfg, grads, state["opt"], params,
-                                           lr_scale=lr_scale)
+        with jax.named_scope("optimizer"):
+            grads, gnorm = optim.clip_by_global_norm(grads, tcfg.grad_clip)
+            lr_scale = schedule(state["step"], warmup=tcfg.warmup_steps,
+                                total=tcfg.total_steps)
+            new_params, new_opt = optim.update(opt_cfg, grads, state["opt"],
+                                               params, lr_scale=lr_scale)
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1,
                      "rng": jax.random.fold_in(state["rng"], 1)}
