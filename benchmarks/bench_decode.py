@@ -95,6 +95,7 @@ def _e2e_section(report, max_new, batch):
     from repro.configs.base import ServeConfig
     from repro.models import build_model
     from repro.models.layers import unbox
+    from repro.obs.profile import CostBook
     from repro.serve.engine import generate
 
     cfg = smoke_config(get_config("olmo-1b")).with_(
@@ -112,16 +113,28 @@ def _e2e_section(report, max_new, batch):
                            decode_loop=loop)
         out = generate(model, params, b, scfg, max_new=max_new)  # compile
         jax.block_until_ready(out)
+        # timed pass carries a cost book: real cost_analysis() FLOPs/bytes
+        # per executable, joined against the walls generate measures
+        book = CostBook(enabled=True)
         t0 = time.perf_counter()
-        out = generate(model, params, b, scfg, max_new=max_new)
+        out = generate(model, params, b, scfg, max_new=max_new, profile=book)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         tps = batch * max_new / dt
         rows.append({"loop": loop, "cache": cache_dtype,
                      "tokens_per_s": tps,
-                     "us_per_token": dt / (batch * max_new) * 1e6})
+                     "us_per_token": dt / (batch * max_new) * 1e6,
+                     "roofline": book.summary()})
         report(f"bench_decode_e2e,loop={loop},cache={cache_dtype},"
                f"tokens_per_s={tps:.1f},us_per_token={dt / (batch * max_new) * 1e6:.1f}")
+        for name, r in book.summary().items():
+            if "roofline_fraction" in r:
+                report(f"bench_decode_roofline,loop={loop},"
+                       f"cache={cache_dtype},exe={name},"
+                       f"gflops={r['achieved_gflops']:.3f},"
+                       f"gbps={r['achieved_gbps']:.3f},"
+                       f"frac={r['roofline_fraction']:.2e},"
+                       f"bound={r['bound_dominant']}")
     return rows
 
 
@@ -184,14 +197,24 @@ def run(report, quick: bool = False):
 
 if __name__ == "__main__":
     import argparse
-    import json
+
+    from repro.obs import ledger, profile
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_decode.json")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer iters, Sk=2048 op shape only")
+    ap.add_argument("--xla-profile", default=None, metavar="DIR",
+                    help="jax.profiler capture window around the bench "
+                         "(xplane + trace.json.gz under DIR)")
+    ap.add_argument("--ledger", default="auto",
+                    help="ledger path ('auto' = next to --json, 'none' to "
+                         "skip the append)")
     args = ap.parse_args()
-    res = run(print, quick=args.quick)
-    with open(args.json, "w") as f:
-        json.dump(res, f, indent=2)
+    with profile.xla_profile(args.xla_profile):
+        res = run(print, quick=args.quick)
+    ledger.finalize(args.json, "decode", res,
+                    mode="smoke" if args.quick else "full",
+                    ledger_path=None if args.ledger == "none"
+                    else args.ledger)
     print(f"# wrote {args.json}")

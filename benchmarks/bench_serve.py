@@ -161,9 +161,16 @@ def _latency_stats(done):
 
 def run_engine(model, params, reqs, scfg, obs=None):
     """Serve ``reqs`` on a prewarmed engine; returns (metrics dict,
-    completions dict) — callers compare completions across engines."""
+    completions dict) — callers compare completions across engines.
+
+    When the engine owns its Obs bundle (``obs=None``) the §16 cost book is
+    switched on: prewarm records each executable's ``cost_analysis()``
+    FLOPs/bytes and the serving loop joins them with measured dispatch
+    walls, reported as the ``roofline`` block per engine."""
     from repro.serve.scheduler import SlotPoolEngine
     eng = SlotPoolEngine(model, params, scfg, obs=obs)
+    if obs is None:
+        eng.obs.profile.enabled = True  # before prewarm: that's record time
     # compile every admission/burst shape up front: admission group shapes
     # depend on wall-clock arrival timing, so an untimed warmup run would
     # not reliably cover them and a mid-run trace would pollute the timing
@@ -190,6 +197,12 @@ def run_engine(model, params, reqs, scfg, obs=None):
            "model_calls": st["model_calls"],
            "tokens_per_model_call": (st["tokens_emitted"] /
                                      max(1, st["model_calls"]))}
+    # cost-analysis join per dispatched executable (only rows that were
+    # actually observed carry achieved/roofline columns)
+    roof = {name: r for name, r in eng.obs.profile.summary().items()
+            if "roofline_fraction" in r}
+    if roof:
+        out["roofline"] = roof
     out.update(_latency_stats(done))
     if scfg.scheduler == "spec":
         out.update(
@@ -205,6 +218,16 @@ def run_engine(model, params, reqs, scfg, obs=None):
             pages_peak=st["pages_peak"],
             preemptions=st["preemptions"])
     return out, done
+
+
+def _report_roofline(report, tag, r):
+    """One achieved-vs-peak line per executable an engine dispatched."""
+    for name, j in r.get("roofline", {}).items():
+        report(f"bench_serve_roofline,{tag},exe={name},"
+               f"calls={j['calls']},gflops={j['achieved_gflops']:.3f},"
+               f"gbps={j['achieved_gbps']:.3f},"
+               f"frac={j['roofline_fraction']:.2e},"
+               f"bound={j['bound_dominant']}")
 
 
 def make_mixed_workload(cfg, n, rng, short, long_, frac_long, new, rate_hz):
@@ -283,6 +306,7 @@ def run(report, smoke: bool = False, prefix_only: bool = False,
                    f"tokens_per_s={r['tokens_per_s']:.1f},"
                    f"p50_ms={r['p50_ms']:.0f},p99_ms={r['p99_ms']:.0f},"
                    f"occupancy={r['occupancy']:.2f}")
+            _report_roofline(report, mode, r)
         speed = (results["engines"]["continuous"]["tokens_per_s"] /
                  results["engines"]["lockstep"]["tokens_per_s"])
         results["continuous_vs_lockstep"] = speed
@@ -325,6 +349,7 @@ def run(report, smoke: bool = False, prefix_only: bool = False,
         report(f"bench_serve,prefix_{name},"
                f"tokens_per_s={r['tokens_per_s']:.1f},"
                f"prefill_tokens={r['prefill_tokens']}{extra}")
+        _report_roofline(report, f"prefix_{name}", r)
     pspeed = (results["prefix_engines"]["paged_prefix"]["tokens_per_s"] /
               results["prefix_engines"]["dense"]["tokens_per_s"])
     results["paged_prefix_vs_dense"] = pspeed
@@ -379,6 +404,7 @@ def _run_spec(report, results, cfg, model, params, rng, smoke, burst):
         report(f"bench_serve,spec_{name},"
                f"tokens_per_s={r['tokens_per_s']:.1f},"
                f"model_calls={r['model_calls']}{extra}")
+        _report_roofline(report, f"spec_{name}", r)
     sspeed = (results["spec_engines"]["spec"]["tokens_per_s"] /
               results["spec_engines"]["baseline"]["tokens_per_s"])
     results["spec_vs_baseline"] = sspeed
@@ -789,16 +815,27 @@ if __name__ == "__main__":
                          "section-only run keeps the other sections' "
                          "results, so each section can be measured in its "
                          "own fresh process)")
+    ap.add_argument("--xla-profile", default=None, metavar="DIR",
+                    help="jax.profiler capture window around the bench "
+                         "(xplane + trace.json.gz under DIR)")
+    ap.add_argument("--ledger", default="auto",
+                    help="ledger path ('auto' = next to --json, 'none' to "
+                         "skip the append)")
     args = ap.parse_args()
-    res = run(print, smoke=args.smoke, prefix_only=args.prefix_only,
-              spec_only=args.spec_only, chunked_only=args.chunked_only,
-              chaos_only=args.chaos, obs_only=args.trace,
-              trace_out=args.trace_out, metrics_out=args.metrics_out)
+    from repro.obs import ledger, profile
+    with profile.xla_profile(args.xla_profile):
+        res = run(print, smoke=args.smoke, prefix_only=args.prefix_only,
+                  spec_only=args.spec_only, chunked_only=args.chunked_only,
+                  chaos_only=args.chaos, obs_only=args.trace,
+                  trace_out=args.trace_out, metrics_out=args.metrics_out)
     out: dict = {}
     if args.merge and os.path.exists(args.json):
         with open(args.json) as f:
             out = json.load(f)
     out.update(res)
-    with open(args.json, "w") as f:
-        json.dump(out, f, indent=2)
+    out.pop("provenance", None)  # re-stamped below: merged result is new
+    ledger.finalize(args.json, "serve", out,
+                    mode="smoke" if args.smoke else "full",
+                    ledger_path=None if args.ledger == "none"
+                    else args.ledger)
     print(f"# wrote {args.json}")

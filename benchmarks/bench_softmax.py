@@ -27,7 +27,9 @@ def _time(fn, *args, iters=20):
 
 
 def run(report):
+    """Returns the machine-readable results dict (also printed as CSV)."""
     key = jax.random.PRNGKey(0)
+    out = []
     for rows, cols in SHAPES:
         z = jax.random.normal(key, (rows, cols), jnp.float32) * 3
         base = None
@@ -36,5 +38,21 @@ def run(report):
             fn = jax.jit(get_softmax(impl))
             us = _time(fn, z)
             base = base or us
+            out.append({"impl": impl, "shape": f"{rows}x{cols}",
+                        "us_per_call": us, "vs_exact": us / base})
             report(f"bench_softmax,{impl},shape={rows}x{cols},"
                    f"us_per_call={us:.1f},vs_exact={us / base:.2f}")
+    return {"softmax": out}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from repro.obs import ledger
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_softmax.json")
+    args = ap.parse_args()
+    res = run(print)
+    ledger.finalize(args.json, "softmax", res)
+    print(f"# wrote {args.json}")

@@ -1,4 +1,6 @@
-"""Render the roofline table from cached dry-run JSONs (results/dryrun)."""
+"""Render roofline tables: the cached dry-run cells (analytic model over
+``results/dryrun``) and, via ``live``, the measured achieved-vs-peak rows
+the §16 cost book wrote into the BENCH_*.json artifacts."""
 from __future__ import annotations
 
 import glob
@@ -37,3 +39,48 @@ def run(report, mesh="single", tag="baseline"):
             f"frac={roof['roofline_fraction']:.3f},"
             f"useful={r.get('useful_flops_ratio', 0):.3f},"
             f"peak_gib={r['memory']['peak_device_bytes'] / 2 ** 30:.2f}")
+
+
+def _live_rows(results: dict):
+    """(tag, executable, join) triples from one BENCH artifact's measured
+    cost-book summaries, wherever they appear."""
+    for r in results.get("kernels", []):
+        if "roofline_fraction" in r:
+            yield "kernels", r["kernel"], r
+    for r in results.get("e2e", []):
+        for exe, j in r.get("roofline", {}).items():
+            if "roofline_fraction" in j:
+                yield f"e2e.{r['loop']}.{r['cache']}", exe, j
+    for section in ("engines", "prefix_engines", "spec_engines",
+                    "chunked_engines"):
+        for name, er in results.get(section, {}).items():
+            for exe, j in er.get("roofline", {}).items():
+                if "roofline_fraction" in j:
+                    yield f"{section}.{name}", exe, j
+
+
+def live(report, root: str = ".") -> None:
+    """Measured achieved-vs-peak table from the BENCH_*.json artifacts —
+    the cost_analysis() x wall-time joins the benches recorded, as opposed
+    to the analytic dry-run cells above."""
+    found = False
+    for fname in ("BENCH_kernels.json", "BENCH_decode.json",
+                  "BENCH_serve.json"):
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            results = json.load(f)
+        prov = results.get("provenance", {})
+        for tag, exe, j in _live_rows(results):
+            found = True
+            report(
+                f"roofline_live,{fname},{tag},{exe},"
+                f"gflops={j['achieved_gflops']:.3f},"
+                f"gbps={j['achieved_gbps']:.3f},"
+                f"frac={j['roofline_fraction']:.2e},"
+                f"bound={j['bound_dominant']},"
+                f"backend={prov.get('backend', '?')},"
+                f"interpret={prov.get('interpret', '?')}")
+    if not found:
+        report("roofline_live,NO_ROWS (run the benchmarks first)")

@@ -1,13 +1,12 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-import json
-import sys
 import time
 
 
 def main() -> None:
-    from benchmarks import (bench_decode, bench_serve, bench_softmax,
-                            roofline_report, table1_accuracy, table2_training,
-                            table3_hardware)
+    from benchmarks import (bench_decode, bench_kernels, bench_serve,
+                            bench_softmax, roofline_report, table1_accuracy,
+                            table2_training, table3_hardware)
+    from repro.obs import ledger
 
     def report(line: str) -> None:
         print(line, flush=True)
@@ -17,16 +16,21 @@ def main() -> None:
     report("## Table 3: hardware cost model (fabric-free op counts)")
     table3_hardware.run(report)
     report("## Softmax emulation wall-time (CPU, jitted)")
-    bench_softmax.run(report)
+    softmax_results = bench_softmax.run(report)
+    ledger.finalize("BENCH_softmax.json", "softmax", softmax_results)
+    report("# wrote BENCH_softmax.json")
+    report("## Kernel microbench: us/call + achieved-vs-peak per registry "
+           "kernel")
+    kernel_results = bench_kernels.run(report)
+    ledger.finalize("BENCH_kernels.json", "kernels", kernel_results)
+    report("# wrote BENCH_kernels.json")
     report("## Decode: op latency (incl. split-K / fp2fx8) + e2e throughput")
     decode_results = bench_decode.run(report)
-    with open("BENCH_decode.json", "w") as f:
-        json.dump(decode_results, f, indent=2)
+    ledger.finalize("BENCH_decode.json", "decode", decode_results)
     report("# wrote BENCH_decode.json")
     report("## Serving: continuous vs lockstep + paged/prefix-cache vs dense")
     serve_results = bench_serve.run(report)
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(serve_results, f, indent=2)
+    ledger.finalize("BENCH_serve.json", "serve", serve_results)
     report("# wrote BENCH_serve.json")
     report("## Table 1: drop-in inference accuracy (synthetic-GLUE proxy)")
     table1_accuracy.run(report)
@@ -34,6 +38,8 @@ def main() -> None:
     table2_training.run(report)
     report("## Roofline (from cached dry-run artifacts)")
     roofline_report.run(report)
+    report("## Roofline (live, from the BENCH artifacts just written)")
+    roofline_report.live(report)
     report(f"# done in {time.time() - t0:.1f}s")
 
 

@@ -12,6 +12,11 @@ Passes:
              nothing new, for the continuous and spec schedulers
   --lint     AST rules over src/repro and scripts/ (traced-bool, host-call,
              prng.constant-seed, cache.not-donated, obs.untimed-hot-path)
+  --bench-regress
+             compare the repo's BENCH_*.json artifacts against their
+             BENCH_ledger.jsonl baseline rows with per-metric tolerances
+             (opt-in: not part of --all — it needs bench artifacts, which
+             only bench runs produce)
 
 ``--verbose`` also prints the scalar weak-convert churn tally from the
 jaxpr pass (notes, not findings: XLA folds rank-0 weak casts).
@@ -30,10 +35,14 @@ def main(argv=None) -> int:
     ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--retrace", action="store_true")
     ap.add_argument("--lint", action="store_true")
+    ap.add_argument("--bench-regress", action="store_true",
+                    help="BENCH_*.json vs ledger baseline (not in --all)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
-    if args.all or not (args.jaxpr or args.pallas or args.retrace or args.lint):
+    explicit = (args.jaxpr or args.pallas or args.retrace or args.lint
+                or args.bench_regress)
+    if args.all or not explicit:
         args.jaxpr = args.pallas = args.retrace = args.lint = True
 
     # lint is pure AST -- run it first so syntax-level breakage is reported
@@ -54,6 +63,10 @@ def main(argv=None) -> int:
     if args.retrace:
         from repro.analysis import retrace
         passes.append(("retrace", lambda: retrace.run()))
+    if args.bench_regress:
+        from repro.obs import ledger
+        root = os.path.join(os.path.dirname(__file__), "..")
+        passes.append(("bench", lambda: ledger.regress(root)))
 
     total = 0
     for name, fn in passes:

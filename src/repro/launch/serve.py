@@ -122,6 +122,11 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="append periodic metrics-registry JSONL snapshots "
                          "to PATH and print the end-of-run metrics report")
+    ap.add_argument("--xla-profile", default=None, metavar="DIR",
+                    help="jax.profiler programmatic capture around the "
+                         "serve: xplane + trace.json.gz artifacts land "
+                         "under DIR (view with tensorboard/xprof; "
+                         "DESIGN.md §16)")
     ap.add_argument("--telemetry", action="store_true",
                     help="fold per-burst device-side numeric stats (softmax "
                          "exponent range, fp2fx8 scale histogram, int8 "
@@ -176,6 +181,7 @@ def main():
                        telemetry=args.telemetry)
 
     from repro.obs import Obs
+    from repro.obs.profile import xla_profile
     obs = None
     if args.trace or args.metrics_out:
         obs = Obs.enabled(metrics_path=args.metrics_out)
@@ -205,8 +211,14 @@ def main():
                                          args.max_new + 1)),
                 frames=frames, deadline=args.deadline))
         eng = SlotPoolEngine(model, params, scfg, key=sample_key, obs=obs)
+        if obs is not None:
+            # compile (and §16 cost-record) every executable up front, so
+            # the trace separates compile spans from steady-state serving
+            # and the cost book has rows for the roofline counter tracks
+            eng.prewarm(max(len(r.tokens) for r in reqs))
         try:
-            done = eng.run(reqs)
+            with xla_profile(args.xla_profile):
+                done = eng.run(reqs)
         except KeyboardInterrupt:
             # graceful drain: in-flight slots free, every unfinished
             # request gets a partial Completion with cancelled=True —
@@ -239,6 +251,9 @@ def main():
             print(f"# wrote metrics {args.metrics_out}")
         if args.telemetry:
             print(f"numerics: {eng.obs.numerics.summary()}")
+        if args.xla_profile:
+            print(f"# wrote xla profile under {args.xla_profile} "
+                  "(xplane + trace.json.gz; view with xprof/tensorboard)")
         return
 
     batch = {"tokens": jax.random.randint(
@@ -248,11 +263,17 @@ def main():
             data_key, (args.batch, cfg.frontend_len, cfg.frontend_dim))
     # the sampling key derives from --seed (it used to be dropped, so
     # --temperature runs always sampled with the hardcoded PRNGKey(0))
-    out = generate(model, params, batch, scfg, max_new=args.max_new,
-                   key=sample_key,
-                   tracer=obs.tracer if obs is not None else None)
+    with xla_profile(args.xla_profile):
+        out = generate(model, params, batch, scfg, max_new=args.max_new,
+                       key=sample_key,
+                       tracer=obs.tracer if obs is not None else None,
+                       profile=obs.profile if obs is not None else None)
+        jax.block_until_ready(out)
     for i, row in enumerate(out.tolist()):
         print(f"[{i}] {row}")
+    if args.xla_profile:
+        print(f"# wrote xla profile under {args.xla_profile} "
+              "(xplane + trace.json.gz; view with xprof/tensorboard)")
     if args.trace:
         obs.tracer.write(args.trace)
         print(f"# wrote trace {args.trace} ({len(obs.tracer.events)} "

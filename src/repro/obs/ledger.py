@@ -1,0 +1,303 @@
+"""Benchmark regression ledger (DESIGN.md §16).
+
+Every bench run (softmax / decode / serve / kernels) appends one JSONL row
+to ``BENCH_ledger.jsonl``, keyed by git SHA with full provenance — backend,
+device kind, Pallas interpret flag, jax version, host, timestamp, and the
+run mode (full vs smoke) — so the CPU interpreter-mode numbers can never
+masquerade as hardware results and the bench trajectory becomes a guarded
+time series.  ``scripts/check.py --bench-regress`` compares the current
+BENCH_*.json artifacts against the committed baseline rows.
+
+Tolerance policy (one of three kinds per metric, applied by ``compare``):
+
+  exact — booleans and counts (output equality, chaos definiteness, kernel
+          coverage): any change is a regression.
+  ratio — machine-portable relative metrics (speedups, acceptance/hit
+          rates): compared whenever backend/device/interpret/mode match;
+          tolerances are generous because scheduler ratios still carry
+          wall-clock arrival timing.
+  wall  — absolute times and rates (us_per_call, tokens/sec): compared
+          only when the baseline row comes from the SAME host, since
+          absolute CPU numbers do not transfer between machines.
+
+Only degradation beyond ``rel_tol`` fails; improvements never do.  The
+baseline for a run is the newest matching row strictly older than the
+run's own; with no older row the run is compared against its own appended
+row — a schema/extraction consistency check rather than a trend check —
+so a freshly committed baseline always passes and the first CI run after
+it gets a real cross-run comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import subprocess
+import time
+from typing import Dict, List, Optional
+
+from repro.analysis.common import Finding
+
+LEDGER = "BENCH_ledger.jsonl"
+PROVENANCE_KEYS = ("backend", "device_kind", "interpret", "jax_version",
+                   "git_sha", "host", "ts", "mode")
+# a baseline row must match the current run on these to be comparable at all
+_MATCH_KEYS = ("backend", "device_kind", "interpret", "mode")
+
+
+def git_sha(root: Optional[str] = None) -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def provenance(mode: str = "full", root: Optional[str] = None) -> dict:
+    import jax
+
+    from repro.kernels.ops import _auto_interpret
+    dev = jax.devices()[0]
+    return {"backend": jax.default_backend(),
+            "device_kind": dev.device_kind,
+            "interpret": bool(_auto_interpret()),
+            "jax_version": jax.__version__,
+            "git_sha": git_sha(root),
+            "host": platform.node(),
+            "ts": time.time(),
+            "mode": mode}
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One guarded bench metric: its value plus the policy ``compare``
+    applies (rows persist values only — policy lives in code, so a
+    tolerance fix applies retroactively to the whole history)."""
+    name: str
+    value: float
+    kind: str               # "exact" | "ratio" | "wall"
+    direction: str = "higher"   # which way is better
+    rel_tol: float = 0.5
+
+
+def _op_metrics(results: dict) -> List[Metric]:
+    out = []
+    for r in results.get("op", []):
+        key = f"op.{r['mode']}.{r['shape']}"
+        out.append(Metric(f"{key}.us_per_step", r["us_per_step"],
+                          "wall", "lower"))
+        if r["mode"] != "unfused":
+            # time ratio vs the unfused baseline on the same host/run:
+            # machine-portable-ish, but interpreter variance is real
+            out.append(Metric(f"{key}.vs_unfused", r["vs_unfused"],
+                              "ratio", "lower", 1.0))
+    rows = {(r["loop"], r["cache"]): r for r in results.get("e2e", [])}
+    for (loop, cache), r in rows.items():
+        out.append(Metric(f"e2e.{loop}.{cache}.tokens_per_s",
+                          r["tokens_per_s"], "wall", "higher"))
+    host = rows.get(("host", "float32"))
+    scan = rows.get(("scan", "float32"))
+    if host and scan:
+        out.append(Metric("e2e.scan_vs_host",
+                          host["us_per_token"] / scan["us_per_token"],
+                          "ratio", "higher", 0.6))
+    return out
+
+
+def _serve_metrics(results: dict) -> List[Metric]:
+    out = []
+    for key in ("continuous_vs_lockstep", "paged_prefix_vs_dense",
+                "spec_vs_baseline", "whole_prompt_vs_chunked_tbt_p99"):
+        if key in results:
+            out.append(Metric(key, float(results[key]), "ratio", "higher",
+                              0.6))
+    if "chunked_outputs_equal" in results:
+        out.append(Metric("chunked_outputs_equal",
+                          float(bool(results["chunked_outputs_equal"])),
+                          "exact"))
+    for section in ("engines", "prefix_engines", "spec_engines",
+                    "chunked_engines"):
+        for name, r in results.get(section, {}).items():
+            out.append(Metric(f"{section}.{name}.tokens_per_s",
+                              r["tokens_per_s"], "wall", "higher"))
+    spec = results.get("spec_engines", {}).get("spec")
+    if spec and "acceptance_rate" in spec:
+        out.append(Metric("spec.acceptance_rate", spec["acceptance_rate"],
+                          "ratio", "higher", 0.3))
+    for name, r in results.get("chaos", {}).get("configs", {}).items():
+        out.append(Metric(f"chaos.{name}.definite", float(r["definite"]),
+                          "exact"))
+        out.append(Metric(f"chaos.{name}.outputs_match",
+                          float(r["outputs_match"]), "exact"))
+    return out
+
+
+def _kernel_metrics(results: dict) -> List[Metric]:
+    rows = results.get("kernels", [])
+    out = [Metric("kernels.count", float(len(rows)), "exact")]
+    for r in rows:
+        out.append(Metric(f"kernels.{r['kernel']}.us_per_call",
+                          r["us_per_call"], "wall", "lower"))
+    return out
+
+
+def _softmax_metrics(results: dict) -> List[Metric]:
+    out = []
+    for r in results.get("softmax", []):
+        key = f"softmax.{r['impl']}.{r['shape']}"
+        out.append(Metric(f"{key}.us_per_call", r["us_per_call"],
+                          "wall", "lower"))
+        if r["impl"] != "exact":
+            out.append(Metric(f"{key}.vs_exact", r["vs_exact"],
+                              "ratio", "lower", 1.0))
+    return out
+
+
+_EXTRACTORS = {"decode": _op_metrics, "serve": _serve_metrics,
+               "kernels": _kernel_metrics, "softmax": _softmax_metrics}
+
+# (bench key, artifact filename) — the files ``regress`` audits
+BENCH_FILES = (("softmax", "BENCH_softmax.json"),
+               ("decode", "BENCH_decode.json"),
+               ("serve", "BENCH_serve.json"),
+               ("kernels", "BENCH_kernels.json"))
+
+
+def extract(bench: str, results: dict) -> List[Metric]:
+    """The guarded metrics of one bench's results dict."""
+    fn = _EXTRACTORS.get(bench)
+    return fn(results) if fn else []
+
+
+def load(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def append(path: str, bench: str, results: dict,
+           prov: Optional[dict] = None) -> dict:
+    """Append one ledger row for ``results`` (uses the artifact's own
+    provenance stamp when present).  The ledger is append-only JSONL —
+    history is the point."""
+    prov = prov or results.get("provenance") or provenance()
+    row = {"bench": bench, "provenance": prov,
+           "metrics": {m.name: m.value for m in extract(bench, results)}}
+    with open(path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    return row
+
+
+def baseline_for(rows: List[dict], bench: str,
+                 prov: dict) -> Optional[dict]:
+    """Newest matching row strictly older than ``prov``; falls back to
+    the newest matching row (the run's own) when no older one exists."""
+    cand = [r for r in rows if r.get("bench") == bench
+            and all(r.get("provenance", {}).get(k) == prov.get(k)
+                    for k in _MATCH_KEYS)]
+    cand.sort(key=lambda r: r.get("provenance", {}).get("ts", 0.0))
+    older = [r for r in cand
+             if r.get("provenance", {}).get("ts", 0.0) < prov.get("ts", 0.0)]
+    if older:
+        return older[-1]
+    return cand[-1] if cand else None
+
+
+def compare(baseline_row: dict, metrics: List[Metric],
+            prov: dict, bench: str = "") -> List[Finding]:
+    """Per-metric tolerance comparison of a current run against one
+    baseline row.  Metrics absent from the baseline are skipped (new
+    metrics enter the guard on the next append)."""
+    base: Dict[str, float] = baseline_row.get("metrics", {})
+    bprov = baseline_row.get("provenance", {})
+    same_host = bprov.get("host") == prov.get("host")
+    where = f"{bench}:" if bench else ""
+    out: List[Finding] = []
+    for m in metrics:
+        if m.name not in base:
+            continue
+        b = float(base[m.name])
+        if m.kind == "exact":
+            if m.value != b:
+                out.append(Finding(
+                    "bench", "regress.exact", where + m.name,
+                    f"expected {b:g} (sha {bprov.get('git_sha')}), "
+                    f"got {m.value:g}"))
+            continue
+        if m.kind == "wall" and not same_host:
+            continue  # absolute CPU numbers do not transfer across hosts
+        if b <= 0:
+            continue
+        deg = ((b - m.value) if m.direction == "higher"
+               else (m.value - b)) / b
+        if deg > m.rel_tol:
+            out.append(Finding(
+                "bench", f"regress.{m.kind}", where + m.name,
+                f"{b:.4g} -> {m.value:.4g} "
+                f"({deg:+.0%} worse than sha {bprov.get('git_sha')}, "
+                f"tolerance {m.rel_tol:.0%})"))
+    return out
+
+
+def regress(root: str = ".", ledger_path: Optional[str] = None,
+            report=print) -> List[Finding]:
+    """The ``scripts/check.py --bench-regress`` pass: every BENCH_*.json
+    under ``root`` is extracted and compared against its ledger baseline.
+    A missing artifact is skipped; an artifact without a provenance stamp
+    is a finding (satellite contract: interpreter numbers must carry
+    their provenance)."""
+    rows = load(ledger_path or os.path.join(root, LEDGER))
+    findings: List[Finding] = []
+    for bench, fname in BENCH_FILES:
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            results = json.load(f)
+        prov = results.get("provenance")
+        if not prov:
+            findings.append(Finding(
+                "bench", "regress.no-provenance", fname,
+                "artifact has no provenance stamp -- regenerate with the "
+                "current bench harness"))
+            continue
+        metrics = extract(bench, results)
+        base = baseline_for(rows, bench, prov)
+        if base is None:
+            report(f"[bench-regress] {bench}: no matching baseline row "
+                   f"(mode={prov.get('mode')}) -- skipped")
+            continue
+        fs = compare(base, metrics, prov, bench=bench)
+        bp = base.get("provenance", {})
+        tag = ("self-row" if bp.get("ts") == prov.get("ts")
+               else f"sha {bp.get('git_sha')}")
+        report(f"[bench-regress] {bench}: {len(metrics)} metric(s) vs "
+               f"{tag}: {len(fs)} regression(s)")
+        findings += fs
+    return findings
+
+
+def finalize(json_path: str, bench: str, results: dict, mode: str = "full",
+             ledger_path: Optional[str] = "auto") -> dict:
+    """Bench ``__main__`` epilogue: stamp provenance into ``results``,
+    write the artifact, append the ledger row.  ``ledger_path="auto"``
+    puts the ledger next to the artifact; None skips the append."""
+    results = dict(results)
+    results["provenance"] = provenance(mode)
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if ledger_path == "auto":
+        ledger_path = os.path.join(
+            os.path.dirname(os.path.abspath(json_path)) or ".", LEDGER)
+    if ledger_path:
+        append(ledger_path, bench, results)
+    return results

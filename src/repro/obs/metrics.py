@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -71,10 +72,12 @@ class Histogram:
         idx = int(math.log(v / _FLOOR) / _LG)
         self._buckets[idx] = self._buckets.get(idx, 0) + 1
 
-    def percentile(self, q: float) -> float:
-        """Approximate q-th percentile (q in [0, 100])."""
+    def percentile(self, q: float) -> Optional[float]:
+        """Approximate q-th percentile (q in [0, 100]); None on an empty
+        histogram — there is no value to report, and 0.0 reads as a real
+        (excellent) latency downstream."""
         if self.count == 0:
-            return 0.0
+            return None
         rank = q / 100.0 * (self.count - 1)
         seen = self._under
         if rank < seen:
@@ -92,6 +95,8 @@ class Histogram:
         return self.total / self.count if self.count else 0.0
 
     def summary(self) -> dict:
+        # percentiles are None when empty (see ``percentile``); count/sum
+        # stay numeric so totals always reconcile
         return {
             "count": self.count, "sum": self.total,
             "min": self.vmin if self.count else 0.0,
@@ -112,6 +117,7 @@ class Registry:
     def __init__(self):
         self._metrics: Dict[Tuple, object] = {}
         self._kinds: Dict[str, type] = {}
+        self._snapshots: List[str] = []  # JSONL lines already exported
 
     def _get(self, cls, name: str, labels: dict):
         bound = self._kinds.setdefault(name, cls)
@@ -151,9 +157,15 @@ class Registry:
         return {"ts": time.time(), "metrics": out}
 
     def write_jsonl(self, path: str) -> None:
-        """Append one snapshot line (JSONL export)."""
-        with open(path, "a") as f:
-            f.write(json.dumps(self.snapshot()) + "\n")
+        """Append one snapshot line (JSONL export), atomically: the full
+        snapshot history is rewritten to a temp file and renamed over the
+        target, so a crash mid-export (or a concurrent reader) never sees
+        a torn line."""
+        self._snapshots.append(json.dumps(self.snapshot()))
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write("\n".join(self._snapshots) + "\n")
+        os.replace(tmp, path)
 
     def report(self) -> str:
         """End-of-run text report."""
@@ -163,6 +175,9 @@ class Registry:
             ltxt = "{" + ltxt + "}" if ltxt else ""
             if isinstance(m, Histogram):
                 s = m.summary()
+                if s["count"] == 0:  # percentiles are None when empty
+                    lines.append(f"{name}{ltxt} count=0")
+                    continue
                 lines.append(
                     f"{name}{ltxt} count={s['count']} mean={s['mean']:.4g} "
                     f"p50={s['p50']:.4g} p90={s['p90']:.4g} "

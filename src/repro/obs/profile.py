@@ -1,0 +1,231 @@
+"""Device-side performance accounting (DESIGN.md §16).
+
+Three layers on top of the §15 spans/metrics substrate:
+
+  ``exec_cost``  — lower a jitted callable at concrete args and read XLA's
+                   HLO cost analysis (FLOPs, bytes accessed,
+                   transcendentals).  Lowering only re-traces — it never
+                   triggers a second backend compile — so capture at
+                   prewarm/build time costs a fraction of the compile the
+                   executable is paying anyway.
+  ``CostBook``   — the per-executable cost ledger the serving engine feeds:
+                   costs recorded at compile time (the same prewarm that
+                   runs under ``compile_watch``), wall times observed per
+                   dispatch.  The join emits achieved GFLOP/s, GB/s, and
+                   the roofline fraction — measured wall time vs the
+                   TPU-v5e roofline bound from ``roofline/analysis.py`` +
+                   ``roofline/hw.py`` — into the metrics registry
+                   (``perf.*{executable=...}``) and as trace counter
+                   events on the Perfetto timeline.
+  ``microbench`` — registry-driven kernel timing over the same
+                   ``analysis/pallas_check.default_registry()`` the tile
+                   prover walks: us/call and achieved-vs-peak per
+                   (kernel, shape, format), the BENCH_kernels.json rows.
+
+XLA's HLO cost analysis counts a ``while``/``scan`` body ONCE regardless of
+trip count (the dry-run path corrects the same way), so ``record`` takes a
+``trip_factor`` — callers pass the statically-known scan trip product
+(burst steps x layer scan), reusing ``analysis.scan_trip_factor`` policy.
+
+The roofline fraction here is *measured-vs-bound*: bound_s =
+max(flops/peak_flops, bytes/hbm_bw) on the TPU-v5e lowering target, over
+the measured wall.  On this CPU container (Pallas interpret mode) the
+fractions are tiny — that is the point: the artifact stops interpreter
+numbers masquerading as hardware results and gives TPU runs a trajectory
+to land on.
+
+``xla_profile`` is the programmatic ``jax.profiler`` capture window
+(``--xla-profile``): xplane + trace.json.gz artifacts per bench run.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, Iterator, List, Optional
+
+import jax
+
+from repro.roofline import analysis, hw
+
+
+def exec_cost(fn, *args) -> Optional[dict]:
+    """FLOPs / bytes / transcendentals of ``fn`` at ``args`` from XLA's HLO
+    cost analysis, via ``jit(fn).lower(*args).cost_analysis()``.  Returns
+    None when the backend offers no analysis (never raises) — callers must
+    treat cost rows as best-effort."""
+    try:
+        cost = fn.lower(*args).cost_analysis()
+    except Exception:
+        return None
+    if isinstance(cost, (list, tuple)):  # some jax versions: per-device list
+        cost = cost[0] if cost else None
+    if not isinstance(cost, dict):
+        return None
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0))}
+
+
+def join_cost(cost: dict, wall_s: float) -> dict:
+    """Join a cost row with a measured wall time: achieved GFLOP/s and
+    GB/s, the TPU-v5e roofline bound (via ``analysis.analyze`` so the
+    compute/memory terms and the dominant-term logic are the dry-run's),
+    and the fraction of that bound the measured time achieves."""
+    roof = analysis.analyze(
+        {"flops": cost["flops"], "bytes accessed": cost["bytes"]},
+        hlo_text="", chips=1)
+    bound_s = roof.step_time_s
+    return {
+        "achieved_gflops": cost["flops"] / wall_s / 1e9,
+        "achieved_gbps": cost["bytes"] / wall_s / 1e9,
+        "peak_gflops": hw.PEAK_FLOPS_BF16 / 1e9,
+        "peak_gbps": hw.HBM_BW / 1e9,
+        "bound_us": bound_s * 1e6,
+        "roofline_fraction": bound_s / wall_s if wall_s > 0 else 0.0,
+        "bound_dominant": roof.dominant,
+    }
+
+
+class CostBook:
+    """Per-executable cost ledger + wall-time join (DESIGN.md §16).
+
+    ``record`` runs at compile time (prewarm / executable build) and is
+    gated on ``enabled`` so engines built by tests and production paths
+    never pay the extra re-trace; ``observe`` runs on the hot path and is
+    one dict probe when nothing was recorded.  ``bind`` attaches the Obs
+    bundle's registry + tracer so joins land as ``perf.*`` gauges and
+    ``roofline.*`` counter tracks.
+    """
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = enabled
+        self.costs: Dict[str, dict] = {}
+        self._agg: Dict[str, dict] = {}
+        self._metrics = None
+        self._tracer = None
+
+    def bind(self, metrics, tracer) -> None:
+        self._metrics = metrics
+        self._tracer = tracer
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.costs
+
+    def record(self, name: str, fn, *args, trip_factor: float = 1.0
+               ) -> Optional[dict]:
+        """Capture ``fn``'s cost at ``args`` under ``name``.  Idempotent
+        per name (an executable's cost is static), no-op unless enabled."""
+        if not self.enabled:
+            return None
+        if name in self.costs:
+            return self.costs[name]
+        c = exec_cost(fn, *args)
+        if c is None:
+            return None
+        c = {"flops": c["flops"] * trip_factor,
+             "bytes": c["bytes"] * trip_factor,
+             "transcendentals": c["transcendentals"] * trip_factor,
+             "trip_factor": trip_factor}
+        self.costs[name] = c
+        return c
+
+    def observe(self, name: str, wall_s: float) -> Optional[dict]:
+        """Join one measured dispatch of ``name`` against its recorded
+        cost; emits gauges/histogram/counter-track and returns the join
+        (None when no cost is on record — the disabled-path cost is this
+        one dict probe)."""
+        cost = self.costs.get(name)
+        if cost is None or wall_s <= 0:
+            return None
+        j = join_cost(cost, wall_s)
+        agg = self._agg.setdefault(name, {"calls": 0, "wall_s": 0.0})
+        agg["calls"] += 1
+        agg["wall_s"] += wall_s
+        if self._metrics is not None:
+            lab = dict(executable=name)
+            self._metrics.gauge("perf.achieved_gflops", **lab).set(
+                j["achieved_gflops"])
+            self._metrics.gauge("perf.achieved_gbps", **lab).set(
+                j["achieved_gbps"])
+            self._metrics.gauge("perf.roofline_fraction", **lab).set(
+                j["roofline_fraction"])
+            self._metrics.histogram("perf.wall_s", **lab).observe(wall_s)
+        if self._tracer is not None and self._tracer.enabled:
+            self._tracer.counter(
+                f"roofline.{name}", cat="perf",
+                gflops=j["achieved_gflops"], gbps=j["achieved_gbps"],
+                frac=j["roofline_fraction"])
+        return j
+
+    def summary(self) -> Dict[str, dict]:
+        """Per-executable rows: static cost + the join at the mean
+        observed wall time (executables recorded but never dispatched
+        carry the cost alone)."""
+        rows: Dict[str, dict] = {}
+        for name, cost in sorted(self.costs.items()):
+            row = dict(cost)
+            agg = self._agg.get(name)
+            if agg and agg["calls"]:
+                mean = agg["wall_s"] / agg["calls"]
+                row.update(calls=agg["calls"], wall_mean_us=mean * 1e6,
+                           **join_cost(cost, mean))
+            rows[name] = row
+        return rows
+
+
+@contextlib.contextmanager
+def xla_profile(outdir: Optional[str]) -> Iterator[None]:
+    """Programmatic ``jax.profiler`` capture window: xplane + trace
+    artifacts land under ``outdir`` (no-op when ``outdir`` is falsy, so
+    call sites thread the ``--xla-profile`` flag through unconditionally).
+    """
+    if not outdir:
+        yield
+        return
+    jax.profiler.start_trace(outdir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def _block(x) -> None:
+    jax.block_until_ready(x)
+
+
+def microbench(entries=None, iters: int = 5, report=None) -> List[dict]:
+    """Time every kernel in the registry (jitted, steady-state) and join
+    against its HLO cost: one row per (kernel, shape, format) with
+    us/call, GFLOP/s, GB/s, and the roofline fraction vs the TPU-v5e
+    bound.  ``entries`` defaults to the same 10-kernel
+    ``pallas_check.default_registry()`` the tile prover covers, so bench
+    coverage and bounds coverage cannot drift apart."""
+    from repro.analysis.pallas_check import default_registry
+    rows: List[dict] = []
+    for entry in entries if entries is not None else default_registry():
+        fn, args = entry.make()
+        jfn = jax.jit(fn)
+        cost = exec_cost(jfn, *args)
+        _block(jfn(*args))  # compile  # lint: allow(obs.untimed-hot-path)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = jfn(*args)  # lint: allow(obs.untimed-hot-path)
+        _block(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        fmt = entry.name.partition("[")[2].rstrip("]") or "float32"
+        row = {"kernel": entry.name, "format": fmt,
+               "shapes": ["x".join(map(str, a.shape)) for a in args],
+               "dtypes": [str(a.dtype) for a in args],
+               "iters": iters, "us_per_call": us}
+        if cost is not None:
+            row.update(cost)
+            row.update(join_cost(cost, us * 1e-6))
+        rows.append(row)
+        if report is not None:
+            frac = row.get("roofline_fraction")
+            report(f"bench_kernels,{entry.name},us_per_call={us:.1f},"
+                   f"gflops={row.get('achieved_gflops', 0):.3f},"
+                   f"gbps={row.get('achieved_gbps', 0):.3f},"
+                   f"bound_us={row.get('bound_us', 0):.3f},"
+                   f"frac={frac if frac is None else format(frac, '.2e')}")
+    return rows

@@ -596,32 +596,46 @@ class SlotPoolEngine:
                                               scfg.cache_dtype)
                 self.cache = self._scatter(self.cache, fresh,
                                            jnp.arange(n, dtype=I32))
+            # cost capture (DESIGN.md §16) must happen BEFORE each
+            # executing call: the executables donate the cache buffer, and
+            # ``lower`` at live args is the only time the shapes are in
+            # hand.  XLA counts scan bodies once, so the trip factor
+            # carries the layers-scan (and burst-steps) product.
+            from repro.roofline.analysis import scan_trip_factor
+            book = self.obs.profile
+            cfg = self.model.cfg
+            layers = scan_trip_factor(cfg, "decode", 1, 1, 1)
             for w in sorted(widths):
                 pc = engine.build_prefill_chunk(
                     self.model, _burst_key_cfg(scfg), w)
+                args = (self.params, self.cache, jnp.zeros((n, w), I32),
+                        jnp.zeros(n, I32), jnp.ones(n, I32),
+                        jnp.zeros(n, bool))
+                book.record(f"prefill_chunk[w={w}]", pc, *args,
+                            trip_factor=scan_trip_factor(
+                                cfg, "prefill", w, 1, 1))
                 # gate all-False: every row computes but none writes, so the
                 # live pool is untouched — no scratch/restore dance needed
-                out, self.cache = pc(self.params, self.cache,
-                                     jnp.zeros((n, w), I32),
-                                     jnp.zeros(n, I32),
-                                     jnp.ones(n, I32), jnp.zeros(n, bool))
+                out, self.cache = pc(*args)
                 jax.block_until_ready(out)
             if self.spec:
                 K = self.scfg.draft_k
-                out = self._spec_step(self.params, self.cache,
-                                      jnp.zeros((n, 1), I32),
-                                      jnp.zeros((n, K), I32),
-                                      jnp.zeros(n, I32),
-                                      jnp.zeros(n, I32), jnp.zeros(n, bool),
-                                      jnp.zeros(n, I32))
+                args = (self.params, self.cache, jnp.zeros((n, 1), I32),
+                        jnp.zeros((n, K), I32), jnp.zeros(n, I32),
+                        jnp.zeros(n, I32), jnp.zeros(n, bool),
+                        jnp.zeros(n, I32))
+                book.record("spec_step", self._spec_step, *args,
+                            trip_factor=layers)
+                out = self._spec_step(*args)
                 self.cache = out[1]
             else:
-                out = self._burst(self.params, self.cache,
-                                  jnp.zeros((n, 1), I32),
-                                  jnp.zeros(n, I32), jnp.zeros(n, bool),
-                                  jnp.zeros(n, I32),
-                                  jnp.full(n, TTL_NONE, I32),
-                                  jax.random.PRNGKey(0))
+                args = (self.params, self.cache, jnp.zeros((n, 1), I32),
+                        jnp.zeros(n, I32), jnp.zeros(n, bool),
+                        jnp.zeros(n, I32), jnp.full(n, TTL_NONE, I32),
+                        jax.random.PRNGKey(0))
+                book.record("decode_burst", self._burst, *args,
+                            trip_factor=max(1, scfg.decode_burst) * layers)
+                out = self._burst(*args)
                 self.cache = out[2]
             jax.block_until_ready(out[0])
 
@@ -845,10 +859,15 @@ class SlotPoolEngine:
                                             _burst_key_cfg(scfg), width)
             # jnp.asarray copies the host mirror, so mutating self.lengths
             # below cannot race the dispatched call
+            t_in = time.perf_counter()
             last, self.cache = pc(self.params, self.cache,
                                   jnp.asarray(toks),
                                   jnp.asarray(self.lengths),
                                   jnp.asarray(n_valid), jnp.asarray(gate))
+            exe = f"prefill_chunk[w={width}]"
+            if exe in self.obs.profile:  # cost join needs the real wall
+                jax.block_until_ready(last)
+                self.obs.profile.observe(exe, time.perf_counter() - t_in)
         self._count("prefills")
         for s in rows:
             self.lengths[s] += min(rem[s], width)
@@ -1096,7 +1115,9 @@ class SlotPoolEngine:
             self.active = np.array(active)
             self.budget = np.array(budget)
             self.last_tok = np.array(tok)[:, 0]
-            self._observe_burst(time.perf_counter() - t_in, emits.shape[0])
+            dt = time.perf_counter() - t_in  # np.asarray blocked above
+            self._observe_burst(dt, emits.shape[0])
+            self.obs.profile.observe("decode_burst", dt)
         if tstats:
             self.obs.numerics.update(tstats)
         self._count("bursts")
@@ -1191,7 +1212,9 @@ class SlotPoolEngine:
             self.active = np.array(active)
             self.budget = np.array(budget)
             self.last_tok = np.array(tok)[:, 0]
-            self._observe_burst(time.perf_counter() - t_in, 1)
+            dt = time.perf_counter() - t_in
+            self._observe_burst(dt, 1)
+            self.obs.profile.observe("spec_step", dt)
         if tstats:
             self.obs.numerics.update(tstats)
         self._count("bursts")

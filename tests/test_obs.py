@@ -133,7 +133,11 @@ def test_histogram_percentiles_within_sketch_error():
 def test_histogram_empty_and_underflow():
     from repro.obs.metrics import Histogram
     h = Histogram()
-    assert h.percentile(50) == 0.0 and h.summary()["min"] == 0.0
+    # empty histogram: percentiles are None (0.0 would read as a real —
+    # excellent — latency downstream), count/sum stay numeric
+    assert h.percentile(50) is None
+    s = h.summary()
+    assert s["count"] == 0 and s["min"] == 0.0 and s["p99"] is None
     h.observe(0.0)  # underflow bucket
     h.observe(5.0)
     assert h.count == 2 and h.percentile(0) == 0.0
